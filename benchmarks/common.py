@@ -1,0 +1,50 @@
+"""Shared benchmark plumbing: timing, threading, CSV emission.
+
+Every figure module prints CSV rows ``name,us_per_call,derived`` so the
+output diff-compares across runs; ``derived`` carries the
+figure-specific metric (ops/s, modelled ns, flush counts, ...).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def wall_us(fn: Callable[[], None], n: int, warmup: int = 16) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def threaded_ops_per_s(worker: Callable[[int], None], n_threads: int,
+                       ops_per_thread: int) -> float:
+    """worker(thread_idx) performs ONE op; returns aggregate ops/s."""
+    errs: List[BaseException] = []
+
+    def body(t):
+        try:
+            for _ in range(ops_per_thread):
+                worker(t)
+        except BaseException as e:      # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=body, args=(t,))
+               for t in range(n_threads)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    dt = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    return n_threads * ops_per_thread / dt

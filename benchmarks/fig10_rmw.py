@@ -1,0 +1,70 @@
+"""Fig. 10 analogue: read-modify-write workload vs Query Fresh.
+
+RMW = get + put through the WAL.  Arcadia with the frequency policy vs
+Arcadia with group commit vs a Query-Fresh-style replicated
+group-commit log.  The frequency policy keeps scaling where the shared
+group-commit counter (and Query Fresh's coarse lock) flatten out.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps.kvstore import BaselineKV, DurableKV
+from repro.core import make_policy
+from repro.core.baselines import QueryFreshLog
+from repro.core.pmem import PMEMDevice
+from repro.core.replication import build_replica_set
+from repro.core.transport import ReplicaServer, ReplicationGroup, Transport
+
+from .common import emit, threaded_ops_per_s
+
+CAP = 1 << 24
+VAL = b"w" * 64
+
+
+def _arcadia_kv(policy_name, **kw):
+    rs = build_replica_set(mode="local+remote", capacity=CAP, n_backups=1,
+                           write_quorum=2)
+    return DurableKV(rs.log, make_policy(policy_name, **kw))
+
+
+def _qf_kv():
+    backup = ReplicaServer(PMEMDevice(CAP + 64), "qf-backup")
+    group = ReplicationGroup([Transport(backup, "qf")], write_quorum=2)
+    return BaselineKV(QueryFreshLog(PMEMDevice(CAP + 64), CAP, repl=group,
+                                    group_size=128))
+
+
+def run(quick: bool = False):
+    ops = 150 if quick else 1200
+    rng = np.random.default_rng(1)
+    keys = [f"k{rng.integers(0, 4096):06d}".encode() for _ in range(8192)]
+    for n_threads in (1, 8, 16):
+        for name, mk in (
+            ("arcadia-freq8", lambda: _arcadia_kv("freq", freq=8)),
+            ("arcadia-group128", lambda: _arcadia_kv("group",
+                                                     group_size=128)),
+            ("query-fresh", _qf_kv),
+        ):
+            kv = mk()
+            counter = {"i": 0}
+            import threading
+            lock = threading.Lock()
+
+            def op(t, kv=kv):
+                with lock:
+                    i = counter["i"]
+                    counter["i"] += 1
+                key = keys[i % len(keys)]
+                cur = kv.get(key) or b""
+                kv.put(key, (cur + VAL)[-64:])       # modify
+            tput = threaded_ops_per_s(op, n_threads, ops)
+            if hasattr(kv, "flush"):
+                kv.flush()
+            emit(f"fig10/rmw/{name}/{n_threads}t", 1e6 / tput,
+                 f"ops_s={tput:.0f}")
+
+
+if __name__ == "__main__":
+    run()

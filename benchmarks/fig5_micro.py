@@ -1,0 +1,127 @@
+"""Fig. 5 analogue: microbenchmark comparison with FLEX and PMDK.
+
+(a) single-thread append latency vs record size (wall µs + modelled ns)
+(b) write-path breakdown: flush+fence count per append — the mechanism
+    behind (a): PMDK persists the tail pointer every append, FLEX
+    persists header/payload/tail separately, Arcadia persists once
+    (no tail in the superline).
+(c) throughput vs thread count (Arcadia freq-8 vs coarse-locked
+    baselines)
+(d) multi-tenant aggregate throughput (N tenants, separate logs)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Log, LogConfig, PMEMDevice
+from repro.core.baselines import FlexLog, PMDKLog
+from repro.core.force_policy import FreqPolicy
+from repro.core.replication import device_size
+
+from .common import emit, threaded_ops_per_s, wall_us
+
+SIZES = (64, 256, 1024, 4096)
+CAP = 1 << 24
+
+
+def _fresh(kind: str):
+    if kind == "arcadia":
+        dev = PMEMDevice(device_size(CAP))
+        return Log.create(dev, LogConfig(capacity=CAP)), dev
+    dev = PMEMDevice(CAP + 64)
+    return (PMDKLog if kind == "pmdk" else FlexLog)(dev, CAP), dev
+
+
+def latency(quick: bool = False):
+    n = 300 if quick else 2000
+    for size in SIZES:
+        payload = b"x" * size
+        for kind in ("arcadia", "pmdk", "flex"):
+            log, dev = _fresh(kind)          # CAP >> n*size: never wraps
+            vns_acc = []
+            if kind == "arcadia":
+                def op():
+                    _, v = log.append_timed(payload)
+                    vns_acc.append(v)
+            else:
+                def op():
+                    _, v = log.append(payload)
+                    vns_acc.append(v)
+            us = wall_us(op, n)
+            emit(f"fig5a/latency/{kind}/{size}B", us,
+                 f"model_ns={np.mean(vns_acc):.0f}")
+
+
+def breakdown(quick: bool = False):
+    n = 200 if quick else 1000
+    payload = b"x" * 1024
+    for kind in ("arcadia", "pmdk", "flex"):
+        log, dev = _fresh(kind)
+        f0 = dev.stats.flushes
+        for _ in range(n):
+            if kind == "arcadia":
+                log.append(payload)
+            else:
+                log.append(payload)
+        flushes = (dev.stats.flushes - f0) / n
+        emit(f"fig5b/flushes_per_append/{kind}", 0.0,
+             f"flushes={flushes:.2f}")
+
+
+def thread_throughput(quick: bool = False):
+    ops = 200 if quick else 1500
+    payload = b"y" * 256
+    for n_threads in (1, 2, 4, 8, 16):
+        # Arcadia: concurrent writers, freq-8 force policy
+        log, _ = _fresh("arcadia")
+        pol = FreqPolicy(8)
+
+        def arc_op(t):
+            rid, ptr = log.reserve(len(payload))
+            if ptr is not None:
+                ptr[:] = payload
+            log.complete(rid)
+            pol.on_complete(log, rid)
+        tput = threaded_ops_per_s(arc_op, n_threads, ops)
+        pol.drain(log)
+        emit(f"fig5c/threads/arcadia/{n_threads}", 1e6 / tput,
+             f"ops_s={tput:.0f}")
+        for kind in ("pmdk", "flex"):
+            blog, _ = _fresh(kind)
+
+            def base_op(t, blog=blog):
+                blog.append(payload)
+            tput = threaded_ops_per_s(base_op, n_threads, ops)
+            emit(f"fig5c/threads/{kind}/{n_threads}", 1e6 / tput,
+                 f"ops_s={tput:.0f}")
+
+
+def multi_tenant(quick: bool = False):
+    ops = 150 if quick else 1000
+    tenants = 8
+    for size in (64, 1024):
+        payload = b"z" * size
+        for kind in ("arcadia", "pmdk", "flex"):
+            logs = [_fresh(kind)[0] for _ in range(tenants)]
+
+            def op(t):
+                log = logs[t]
+                if kind == "arcadia":
+                    log.append(payload, freq=8)
+                else:
+                    log.append(payload)
+            tput = threaded_ops_per_s(op, tenants, ops)
+            emit(f"fig5d/multitenant/{kind}/{size}B", 1e6 / tput,
+                 f"agg_ops_s={tput:.0f}")
+
+
+def run(quick: bool = False):
+    latency(quick)
+    breakdown(quick)
+    thread_throughput(quick)
+    multi_tenant(quick)
+
+
+if __name__ == "__main__":
+    run()

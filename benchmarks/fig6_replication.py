@@ -1,0 +1,82 @@
+"""Fig. 6 analogue: replication overhead analysis.
+
+(a) flush-ordering study — modelled latency of the replication
+    primitive for parallel / LF+Rep / Rep+LF across record sizes;
+(c) LLC miss counts per ordering (the mechanism: flushing first evicts
+    the source lines the NIC then has to re-read from PMEM);
+(d) throughput vs number of backups (adding backups beyond the first
+    barely matters: writes fan out in parallel).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (ORDERINGS, PMEMDevice, REP_LF, write_and_force)
+from repro.core.replication import build_replica_set, device_size
+
+from .common import emit
+
+SIZES = (256, 1024, 4096)
+
+
+def flush_ordering(quick: bool = False):
+    n = 100 if quick else 500
+    for size in SIZES:
+        for ordering in ORDERINGS:
+            rs = build_replica_set(mode="local+remote", capacity=1 << 22,
+                                   n_backups=1, write_quorum=2)
+            dev = rs.primary_dev
+            payload = np.random.default_rng(0).integers(
+                0, 256, size, dtype=np.uint8).tobytes()
+            off = rs.log.ring_off
+            vns = []
+            m0 = dev.stats.llc_misses
+            for i in range(n):
+                dev.write(off, payload)
+                vns.append(write_and_force(dev, off, size, rs.group,
+                                           ordering))
+            misses = (dev.stats.llc_misses - m0) / n
+            emit(f"fig6a/ordering/{ordering}/{size}B",
+                 np.mean(vns) / 1e3,
+                 f"model_ns={np.mean(vns):.0f};llc_miss={misses:.1f}")
+            rs.shutdown()
+
+
+def backup_scaling(quick: bool = False):
+    n = 100 if quick else 400
+    size = 1024
+    payload = b"b" * size
+    for n_backups in (0, 1, 2, 3, 4):
+        if n_backups == 0:
+            dev = PMEMDevice(device_size(1 << 22))
+            off = 4096
+            vns = []
+            for _ in range(n):
+                dev.write(off, payload)
+                vns.append(dev.persist(off, size))
+            mean = np.mean(vns)
+        else:
+            rs = build_replica_set(mode="local+remote", capacity=1 << 22,
+                                   n_backups=n_backups,
+                                   write_quorum=n_backups + 1)
+            dev = rs.primary_dev
+            off = rs.log.ring_off
+            vns = []
+            for _ in range(n):
+                dev.write(off, payload)
+                vns.append(write_and_force(dev, off, size, rs.group,
+                                           REP_LF))
+            mean = np.mean(vns)
+            rs.shutdown()
+        emit(f"fig6d/backups/{n_backups}", mean / 1e3,
+             f"model_ops_s={1e9 / mean:.0f}")
+
+
+def run(quick: bool = False):
+    flush_ordering(quick)
+    backup_scaling(quick)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Fig. 9 analogue: KV-store integration (the paper's RocksDB swap).
+
+Durable puts through each WAL backend: Arcadia local (fine-grained
+interface + freq policy), Arcadia local+remote (1 backup), FLEX, PMDK.
+Sequential vs random key order, 8 writer threads.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps.kvstore import BaselineKV, DurableKV
+from repro.core import Log, LogConfig, PMEMDevice, make_policy
+from repro.core.baselines import FlexLog, PMDKLog
+from repro.core.replication import build_replica_set, device_size
+
+from .common import emit, threaded_ops_per_s
+
+CAP = 1 << 24
+VAL = b"v" * 100
+
+
+def _arcadia(backups=0):
+    if backups:
+        rs = build_replica_set(mode="local+remote", capacity=CAP,
+                               n_backups=backups, write_quorum=backups + 1)
+        return DurableKV(rs.log, make_policy("freq", freq=8))
+    dev = PMEMDevice(device_size(CAP))
+    log = Log.create(dev, LogConfig(capacity=CAP))
+    return DurableKV(log, make_policy("freq", freq=8))
+
+
+def _keys(order: str, n: int):
+    if order == "seq":
+        return [f"key{i:08d}".encode() for i in range(n)]
+    rng = np.random.default_rng(0)
+    return [f"key{rng.integers(0, 1 << 30):08d}".encode()
+            for _ in range(n)]
+
+
+def run(quick: bool = False):
+    threads = 8
+    ops = 150 if quick else 1500
+    for order in ("seq", "random"):
+        keys = _keys(order, threads * ops)
+        backends = {
+            "arcadia-0bkp": _arcadia(0),
+            "arcadia-1bkp": _arcadia(1),
+            "flex": BaselineKV(FlexLog(PMEMDevice(CAP + 64), CAP)),
+            "pmdk": BaselineKV(PMDKLog(PMEMDevice(CAP + 64), CAP)),
+        }
+        for name, kv in backends.items():
+            counter = {"i": 0}
+            import threading
+            lock = threading.Lock()
+
+            def op(t, kv=kv):
+                with lock:
+                    i = counter["i"]
+                    counter["i"] += 1
+                kv.put(keys[i % len(keys)], VAL)
+            tput = threaded_ops_per_s(op, threads, ops)
+            if hasattr(kv, "flush"):
+                kv.flush()
+            emit(f"fig9/kvstore/{order}/{name}", 1e6 / tput,
+                 f"ops_s={tput:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,138 @@
+"""Roofline summary: reads artifacts/dryrun/*.json (written by
+launch/dryrun.py) and derives the three per-cell roofline terms:
+
+    compute    = HLO_FLOPs_per_device / 197e12        (v5e bf16 peak)
+    memory     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+    collective = collective_bytes_per_device / 50e9   (ICI per link)
+
+All figures use the scan-corrected counts (full graph + (n_blocks-1) ×
+standalone block).  MODEL_FLOPS = 6·N_active·tokens for training,
+2·N_active·tokens for inference.  The table is written to
+artifacts/roofline.csv and echoed as CSV benchmark rows.
+
+Caveat recorded in EXPERIMENTS.md: HLO "bytes accessed" counts operand
+bytes per op before fusion, so the memory term is an upper bound.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+from .common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 1 * 128, "long_500k": 1 * 1}
+TRAIN_FACTOR = {"train_4k": 6, "prefill_32k": 2, "decode_32k": 2,
+                "long_500k": 2}
+
+
+def _active_params(arch: str) -> int:
+    from repro.configs import get_config
+    return get_config(arch).active_param_count()
+
+
+def _memory_floor(rec: Dict) -> float:
+    """Analytic lower bound on per-device HBM bytes for one step:
+    read every input buffer once (params/opt/cache — from the compiled
+    memory analysis, i.e. truly per-device sharded sizes), write every
+    output once, plus residual-stream activation traffic.  The HLO
+    operand-bytes figure is kept as an upper bound (pre-fusion)."""
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    mem = rec.get("memory_analysis", {})
+    args = mem.get("argument_size_in_bytes", 0)
+    outs = mem.get("output_size_in_bytes", 0)
+    # activation residual traffic: tokens/dev × d_model × 2B × layers ×
+    # (write + read), ×2 for the backward+remat pass in training
+    n_data = 16 if shape.global_batch % 16 == 0 else 1
+    tokens_dev = shape.seq_len * shape.global_batch / n_data \
+        if shape.kind != "decode" else shape.global_batch / \
+        max(1, n_data if shape.global_batch % n_data == 0 else 1)
+    act = tokens_dev * cfg.d_model * 2 * cfg.n_layers * 2
+    if shape.kind == "train":
+        return args + outs + 2 * act
+    return args + outs + act
+
+
+def analyse(rec: Dict) -> Dict:
+    f = rec.get("flops_per_device_corrected", rec["flops_per_device"])
+    b = rec.get("bytes_accessed_per_device_corrected",
+                rec["bytes_accessed_per_device"])
+    cc = rec.get("collective_bytes_per_device_corrected",
+                 rec["collective_bytes_per_device"])
+    coll = sum(v for k, v in cc.items() if k != "count")
+    t_c = f / PEAK_FLOPS
+    t_m_upper = b / HBM_BW
+    t_m = _memory_floor(rec) / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    shape = rec["shape"]
+    model_flops = (TRAIN_FACTOR[shape] * _active_params(rec["arch"]) *
+                   TOKENS[shape])
+    hlo_total = f * rec["n_devices"]
+    best = max(t_c, t_m, t_x)
+    return dict(
+        cell=rec["cell"], shape=shape, mesh=rec["mesh"],
+        compute_s=t_c, memory_s=t_m, memory_upper_s=t_m_upper,
+        collective_s=t_x, dominant=dom,
+        model_flops=model_flops, hlo_flops_total=hlo_total,
+        useful_ratio=model_flops / hlo_total if hlo_total else 0.0,
+        roofline_fraction=t_c / best if best else 0.0,
+        step_bound_s=best,
+    )
+
+
+def suggestion(a: Dict) -> str:
+    if a["dominant"] == "collective":
+        return ("cut the dominant collective: reshard so the largest "
+                "all-reduce becomes an all-gather of weights / "
+                "reduce-scatter of grads")
+    if a["dominant"] == "memory":
+        return ("reduce HBM traffic: larger fused blocks, bf16 "
+                "residuals, avoid materialized score tiles")
+    return ("raise MXU utilization: remove causal-mask waste and remat "
+            "recompute; check useful_ratio")
+
+
+def run(quick: bool = False, out_dir: str = "artifacts/dryrun",
+        csv_path: str = "artifacts/roofline.csv"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or rec["cell"].endswith("__unroll"):
+            continue
+        recs.append(analyse(rec))
+    if not recs:
+        print("roofline,SKIP,no dry-run artifacts found")
+        return
+    os.makedirs(os.path.dirname(csv_path), exist_ok=True)
+    cols = ["cell", "compute_s", "memory_s", "memory_upper_s",
+            "collective_s", "dominant", "useful_ratio",
+            "roofline_fraction"]
+    with open(csv_path, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for a in recs:
+            f.write(",".join(f"{a[c]:.4g}" if isinstance(a[c], float)
+                             else str(a[c]) for c in cols) + "\n")
+    for a in recs:
+        emit(f"roofline/{a['cell']}", a["step_bound_s"] * 1e6,
+             f"dom={a['dominant']};comp_ms={a['compute_s']*1e3:.1f};"
+             f"mem_ms={a['memory_s']*1e3:.1f};"
+             f"coll_ms={a['collective_s']*1e3:.1f};"
+             f"useful={a['useful_ratio']:.2f};"
+             f"roof_frac={a['roofline_fraction']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

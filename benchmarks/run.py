@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure + roofline
+summary from the dry-run artifacts.  Prints ``name,us_per_call,derived``
+CSV rows (quick sizes; pass --full for paper-scale runs)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slower)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure list, e.g. fig5,fig8")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (fig5_micro, fig6_replication, fig7_recovery,
+                   fig8_force_policy, fig9_kvstore, fig10_rmw, roofline)
+    figures = {
+        "fig5": fig5_micro.run,
+        "fig6": fig6_replication.run,
+        "fig7": fig7_recovery.run,
+        "fig8": fig8_force_policy.run,
+        "fig9": fig9_kvstore.run,
+        "fig10": fig10_rmw.run,
+        "roofline": roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    failures = 0
+    for name, fn in figures.items():
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn(quick=quick)
+        except Exception as e:
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .kvstore import DurableKV
+
+__all__ = ["DurableKV"]

@@ -1,0 +1,16 @@
+"""Log-backed distributed checkpointing (the paper's technique as a
+first-class framework feature).  See manager.py for the write-path
+mapping onto reserve/copy/complete/force."""
+
+from .codec import (ShardCorruptError, ShardMeta, decode_shard, encode_shard,
+                    shard_checksum)
+from .manager import (CheckpointConfig, CheckpointManager, JOURNAL_TAG,
+                      MANIFEST_TAG)
+from .store import FileStore, ObjectStore, ReplicatedStore, StoreError
+
+__all__ = [
+    "ShardCorruptError", "ShardMeta", "decode_shard", "encode_shard",
+    "shard_checksum", "CheckpointConfig", "CheckpointManager",
+    "JOURNAL_TAG", "MANIFEST_TAG", "FileStore", "ObjectStore",
+    "ReplicatedStore", "StoreError",
+]

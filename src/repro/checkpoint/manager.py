@@ -1,0 +1,253 @@
+"""Distributed checkpoint manager built on the Arcadia log.
+
+The paper's write path, applied to training state:
+
+  reserve   — allocate the manifest's LSN in the log: checkpoints of
+              successive steps get monotonic LSNs, so commit order is
+              total even with overlapping async saves.
+  copy      — shard payload writes to the replicated object stores, fully
+              concurrent across leaves/chunks/threads (integrity primitive
+              per shard: no ordering or atomicity needed — §3).
+  complete  — the manifest (shard keys + whole-object checksums + step +
+              extra metadata) is written as the log record payload.
+  force     — quorum-committed via the log with the *frequency-based force
+              policy*: with frequency F and T concurrent save groups, at
+              most F×T checkpoint commits can be lost on a crash (§4.4) —
+              the knob that makes per-step journaling affordable.
+
+Recovery = log recovery (quorum, epochs) + walking committed manifests
+newest-first until one fully validates against the stores (read-repair
+fixes straggler replicas).  Restore reassembles chunked leaves, so a
+checkpoint written by N hosts restores onto M != N hosts (elastic).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.log import Log, LogFullError
+from .codec import (ShardCorruptError, ShardMeta, decode_shard, encode_shard,
+                    shard_checksum)
+from .store import ReplicatedStore
+
+MANIFEST_TAG = b"CKPT"
+JOURNAL_TAG = b"JRNL"
+
+
+@dataclass
+class CheckpointConfig:
+    force_freq: int = 1          # F — manifest commit frequency
+    writer_threads: int = 4      # concurrent shard writers ("copy" stage)
+    chunks_per_leaf: int = 1     # axis-0 chunking (per-host shards)
+    keep_last: int = 2           # GC horizon (committed checkpoints kept)
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    import jax
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, store: ReplicatedStore, log: Log,
+                 cfg: Optional[CheckpointConfig] = None):
+        self.store = store
+        self.log = log
+        self.cfg = cfg or CheckpointConfig()
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.cfg.writer_threads, thread_name_prefix="ckpt")
+        # async saves run on a dedicated single worker: manifests commit
+        # in submission (step) order, and shard-put futures on _pool can
+        # never be starved by a waiting save
+        self._save_pool = ThreadPoolExecutor(max_workers=1,
+                                             thread_name_prefix="ckpt-save")
+        self._save_lock = threading.Lock()
+        self._async: List[Future] = []
+
+    # ------------------------------------------------------------------ #
+    # save path
+    # ------------------------------------------------------------------ #
+    def _chunk(self, arr: np.ndarray) -> List[np.ndarray]:
+        c = self.cfg.chunks_per_leaf
+        if c <= 1 or arr.ndim == 0 or arr.shape[0] < c:
+            return [arr]
+        return np.array_split(arr, c, axis=0)
+
+    def save(self, step: int, state, extra: Optional[Dict[str, Any]] = None,
+             sync: bool = False) -> int:
+        """Write one checkpoint; returns the manifest's LSN.
+
+        ``sync=True`` forces with freq=1 (explicit durability guarantee —
+        the paper's transaction-commit use case); otherwise the configured
+        frequency policy amortizes the force.
+        """
+        leaves = _leaf_paths(state)
+        entries: List[Dict[str, Any]] = []
+        futs = []
+        for path, leaf in leaves:
+            arr = np.asarray(leaf)
+            chunks = self._chunk(arr)
+            for ci, chunk in enumerate(chunks):
+                key = f"step{step:012d}{path}/c{ci}of{len(chunks)}"
+                meta = ShardMeta(key=key, step=step, dtype=str(chunk.dtype),
+                                 shape=tuple(chunk.shape), chunk_index=ci,
+                                 n_chunks=len(chunks),
+                                 global_shape=tuple(arr.shape))
+                futs.append(self._pool.submit(self._put_shard, key, chunk,
+                                              meta))
+            entries.append(dict(path=path, dtype=str(arr.dtype),
+                                shape=list(arr.shape), n_chunks=len(chunks)))
+        checksums = {}
+        for f in futs:                     # all shards durable before commit
+            key, csum = f.result()
+            checksums[key] = csum
+        manifest = dict(step=step, entries=entries, checksums=checksums,
+                        extra=extra or {})
+        payload = MANIFEST_TAG + json.dumps(manifest).encode()
+        with self._save_lock:              # manifests commit in step order
+            rid, view = self.log.reserve(len(payload))
+            if view is not None:
+                view[:] = payload
+            else:
+                self.log.copy(rid, payload)
+            self.log.complete(rid)
+        self.log.force(rid, freq=1 if sync else self.cfg.force_freq)
+        return rid
+
+    def save_async(self, step: int, state,
+                   extra: Optional[Dict[str, Any]] = None) -> Future:
+        """Overlap checkpointing with training compute.  The dedicated
+        save worker serializes saves, so manifests commit in step order
+        (the log's in-order-commit invariant extended to checkpoints);
+        shard writes within each save still fan out over _pool."""
+        state = _snapshot(state)
+        fut = self._save_pool.submit(self.save, step, state, extra)
+        self._async.append(fut)
+        return fut
+
+    def wait(self) -> None:
+        for f in self._async:
+            f.result()
+        self._async.clear()
+
+    def _put_shard(self, key: str, chunk: np.ndarray, meta: ShardMeta
+                   ) -> Tuple[str, int]:
+        raw = encode_shard(chunk, meta)
+        self.store.put(key, raw)
+        return key, shard_checksum(raw)
+
+    # ------------------------------------------------------------------ #
+    # journal records (same log, same policy)
+    # ------------------------------------------------------------------ #
+    def journal(self, record: Dict[str, Any], sync: bool = False) -> int:
+        payload = JOURNAL_TAG + json.dumps(record).encode()
+        rid = self.log.append(payload,
+                              freq=1 if sync else self.cfg.force_freq)
+        return rid
+
+    # ------------------------------------------------------------------ #
+    # restore path
+    # ------------------------------------------------------------------ #
+    def manifests(self) -> List[Tuple[int, Dict[str, Any]]]:
+        """(lsn, manifest) for every committed manifest, oldest first."""
+        out = []
+        for lsn, payload in self.log.iter_records():
+            if payload[:4] == MANIFEST_TAG:
+                out.append((lsn, json.loads(payload[4:].decode())))
+        return out
+
+    def journal_records(self) -> List[Tuple[int, Dict[str, Any]]]:
+        return [(lsn, json.loads(p[4:].decode()))
+                for lsn, p in self.log.iter_records()
+                if p[:4] == JOURNAL_TAG]
+
+    def latest_step(self) -> Optional[int]:
+        ms = self.manifests()
+        return ms[-1][1]["step"] if ms else None
+
+    def restore(self, template, step: Optional[int] = None
+                ) -> Tuple[int, Any, Dict[str, Any]]:
+        """Restore the newest (or requested) checkpoint that fully
+        validates.  Falls back to older checkpoints if shards of the
+        newest are unrecoverable on every replica."""
+        import jax
+        cands = self.manifests()
+        if step is not None:
+            cands = [(l, m) for l, m in cands if m["step"] == step]
+        if not cands:
+            raise FileNotFoundError("no committed checkpoint manifest found")
+        last_err: Optional[Exception] = None
+        for lsn, manifest in reversed(cands):
+            try:
+                state = self._materialize(template, manifest)
+                return manifest["step"], state, manifest.get("extra", {})
+            except (ShardCorruptError, KeyError) as e:
+                last_err = e               # try the previous checkpoint
+        raise ShardCorruptError(
+            f"no restorable checkpoint (last error: {last_err})")
+
+    def _materialize(self, template, manifest: Dict[str, Any]):
+        import jax
+        step = manifest["step"]
+        by_path = {e["path"]: e for e in manifest["entries"]}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, tleaf in flat:
+            p = jax.tree_util.keystr(path)
+            if p not in by_path:
+                raise KeyError(f"leaf {p} missing from manifest")
+            e = by_path[p]
+            chunks = []
+            for ci in range(e["n_chunks"]):
+                key = f"step{step:012d}{p}/c{ci}of{e['n_chunks']}"
+                raw = self.store.get(
+                    key, expect_checksum=manifest["checksums"].get(key))
+                arr, meta = decode_shard(raw)
+                chunks.append(arr)
+            full = chunks[0] if len(chunks) == 1 else \
+                np.concatenate(chunks, axis=0)
+            expect_shape = tuple(e["shape"])
+            if tuple(full.shape) != expect_shape:
+                raise ShardCorruptError(
+                    f"{p}: reassembled {full.shape} != {expect_shape}")
+            t_shape = tuple(np.shape(tleaf)) if hasattr(tleaf, "shape") \
+                else tuple(np.asarray(tleaf).shape)
+            if t_shape != expect_shape:
+                raise ValueError(
+                    f"{p}: template shape {t_shape} != stored {expect_shape}")
+            leaves.append(full)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # ------------------------------------------------------------------ #
+    # space management (log reclamation + shard GC)
+    # ------------------------------------------------------------------ #
+    def gc(self) -> int:
+        """Drop committed checkpoints beyond keep_last: delete their shards
+        and tombstone their manifest records (log head advances)."""
+        ms = [(l, m) for l, m in self.manifests()
+              if l <= self.log.durable_lsn]
+        victims = ms[:-self.cfg.keep_last] if self.cfg.keep_last else ms
+        removed = 0
+        for lsn, manifest in victims:
+            for key in manifest["checksums"]:
+                self.store.delete(key)
+            self.log.cleanup(lsn)
+            removed += 1
+        return removed
+
+    def close(self) -> None:
+        self.wait()
+        self._save_pool.shutdown(wait=True)
+        self._pool.shutdown(wait=True)
+
+
+def _snapshot(tree):
+    """Deep-copy leaves to host so async saves see a stable image."""
+    import jax
+    return jax.tree_util.tree_map(lambda x: np.array(x), tree)

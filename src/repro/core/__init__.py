@@ -1,0 +1,43 @@
+"""Arcadia core: the paper's replicated PMEM log, faithfully.
+
+Public surface:
+
+  PMEMDevice / CostModel        — simulated PMEM with real volatility
+  persist / write_and_force     — persistence + replication primitives
+  IntegrityRegion / AtomicRegion— integrity + atomicity primitives
+  Log / LogConfig               — the log (reserve/copy/complete/force)
+  force_policy.make_policy      — sync / group / freq force policies
+  build_replica_set             — local / local+remote / remote_only setups
+  quorum_recover / CopyAccessor — §4.2 recovery protocol
+  ClusterManager                — membership / election / fencing contract
+  baselines                     — PMDK / FLEX / Query Fresh comparators
+"""
+
+from .pmem import CACHE_LINE, ATOM, CostModel, DeviceStats, PMEMDevice
+from .primitives import (AtomicRegion, IntegrityRegion, LF_REP, ORDERINGS,
+                         PARALLEL, REP_LF, persist, write_and_force)
+from .log import (CorruptLogError, Log, LogConfig, LogError, LogFullError,
+                  Superline)
+from .force_policy import (ForcePolicy, FreqPolicy, GroupCommitPolicy,
+                           SyncPolicy, make_policy)
+from .transport import (QuorumError, ReplicaServer, ReplicationGroup,
+                        Transport, TransportError)
+from .replication import ReplicaSet, build_replica_set, device_size
+from .recovery import CopyAccessor, RecoveryError, RecoveryReport, \
+    quorum_recover
+from .cluster import ClusterManager, Node
+
+__all__ = [
+    "CACHE_LINE", "ATOM", "CostModel", "DeviceStats", "PMEMDevice",
+    "AtomicRegion", "IntegrityRegion", "LF_REP", "ORDERINGS", "PARALLEL",
+    "REP_LF", "persist", "write_and_force",
+    "CorruptLogError", "Log", "LogConfig", "LogError", "LogFullError",
+    "Superline",
+    "ForcePolicy", "FreqPolicy", "GroupCommitPolicy", "SyncPolicy",
+    "make_policy",
+    "QuorumError", "ReplicaServer", "ReplicationGroup", "Transport",
+    "TransportError",
+    "ReplicaSet", "build_replica_set", "device_size",
+    "CopyAccessor", "RecoveryError", "RecoveryReport", "quorum_recover",
+    "ClusterManager", "Node",
+]

@@ -1,0 +1,92 @@
+"""Minimal cluster-infrastructure contract (§4.2).
+
+The paper assumes an external membership/quorum service (ZooKeeper) that
+(a) tracks node liveness, (b) elects the active primary for each log
+instance, and (c) informs backups of primary changes so they can fence
+the old primary.  ``ClusterManager`` provides exactly that contract,
+in-process and deterministic, so failover paths are unit-testable:
+
+    cm = ClusterManager(nodes)
+    cm.on_primary_change(lambda old, new: ...)
+    cm.report_failure("node0")   # -> fence node0 everywhere, elect, notify
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from .transport import ReplicaServer
+
+
+@dataclass
+class Node:
+    node_id: str
+    server: Optional[ReplicaServer] = None    # None => client-only node
+    alive: bool = True
+
+
+class ClusterManager:
+    """Membership + leader election + fencing for one Arcadia log."""
+
+    def __init__(self, nodes: List[Node]):
+        if not nodes:
+            raise ValueError("cluster needs at least one node")
+        self._lock = threading.Lock()
+        self.nodes: Dict[str, Node] = {n.node_id: n for n in nodes}
+        self._primary = self._elect_locked()
+        self._callbacks: List[Callable[[str, str], None]] = []
+
+    # -- queries ----------------------------------------------------------- #
+    @property
+    def primary(self) -> str:
+        with self._lock:
+            return self._primary
+
+    def alive_nodes(self) -> List[str]:
+        with self._lock:
+            return [n.node_id for n in self.nodes.values() if n.alive]
+
+    def has_quorum(self, needed: int) -> bool:
+        return len(self.alive_nodes()) >= needed
+
+    # -- membership events -------------------------------------------------- #
+    def on_primary_change(self, cb: Callable[[str, str], None]) -> None:
+        self._callbacks.append(cb)
+
+    def report_failure(self, node_id: str) -> Optional[str]:
+        """Liveness detector verdict: ``node_id`` is dead.  If it was the
+        primary: fence it on every surviving server, elect a successor,
+        and fire callbacks (app migration + log recovery hook).
+        Returns the new primary id if a failover happened."""
+        with self._lock:
+            node = self.nodes.get(node_id)
+            if node is None or not node.alive:
+                return None
+            node.alive = False
+            if node_id != self._primary:
+                return None
+            old = self._primary
+            # backups immediately close connections with the old primary
+            for n in self.nodes.values():
+                if n.alive and n.server is not None:
+                    n.server.fence(old)
+            self._primary = self._elect_locked()
+            new = self._primary
+        for cb in self._callbacks:
+            cb(old, new)
+        return new
+
+    def report_recovery(self, node_id: str) -> None:
+        """A failed node rejoined (as a backup; it stays fenced as primary
+        until re-elected through a fresh epoch)."""
+        with self._lock:
+            if node_id in self.nodes:
+                self.nodes[node_id].alive = True
+
+    def _elect_locked(self) -> str:
+        alive = sorted(nid for nid, n in self.nodes.items() if n.alive)
+        if not alive:
+            raise RuntimeError("no live nodes: cluster lost")
+        return alive[0]

@@ -1,0 +1,107 @@
+"""Force policies (§4.4): when does a log write become durable?
+
+  * SyncPolicy   — force(freq=1) after every record: strongest freshness,
+                   one persist+replicate round per record.
+  * GroupCommitPolicy — classic group commit [Helland et al.]: a shared
+                   window counter under a mutex; the thread that fills the
+                   window forces the batch.  Implemented *with* the shared
+                   counter on purpose — Fig. 8 shows exactly this counter
+                   thrashing caches at high concurrency.
+  * FreqPolicy   — the paper's frequency-based policy: a record whose
+                   LSN ≡ 0 (mod F) makes its completing thread the force
+                   leader for the batch; no shared state beyond the LSNs
+                   that reserve() already hands out.  Bounded loss: F×T
+                   completed records (worst case, Fig. 4).
+
+All policies expose ``on_complete(log, rec_id)`` called after
+``log.complete(rec_id)`` and ``drain(log)`` to force everything at the
+end of a run.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from .log import Log
+
+
+class ForcePolicy:
+    name = "base"
+
+    def on_complete(self, log: Log, rec_id: int) -> None:
+        raise NotImplementedError
+
+    def drain(self, log: Log) -> None:
+        last = log.next_lsn - 1
+        if last >= 1 and log.durable_lsn < last:
+            log.force(last, freq=1)
+
+    def vulnerability_bound(self, log: Log) -> Optional[int]:
+        return None
+
+
+class SyncPolicy(ForcePolicy):
+    name = "sync"
+
+    def on_complete(self, log: Log, rec_id: int) -> None:
+        log.force(rec_id, freq=1)
+
+    def vulnerability_bound(self, log: Log) -> Optional[int]:
+        return 0
+
+
+class GroupCommitPolicy(ForcePolicy):
+    """Shared-counter group commit (the design the paper argues against).
+
+    ``_count`` and its mutex are the contended cache line: every complete
+    from every thread bounces it (Fig. 8b L1d misses).
+    """
+
+    name = "group"
+
+    def __init__(self, group_size: int):
+        self.group_size = int(group_size)
+        self._lock = threading.Lock()
+        self._count = 0
+
+    def on_complete(self, log: Log, rec_id: int) -> None:
+        lead = False
+        with self._lock:                 # the contended line
+            self._count += 1
+            if self._count >= self.group_size:
+                self._count = 0
+                lead = True
+        if lead:
+            log.force(rec_id, freq=1)
+
+    def vulnerability_bound(self, log: Log) -> Optional[int]:
+        # window size + records racing in while the leader forces
+        return self.group_size + log.cfg.max_threads
+
+
+class FreqPolicy(ForcePolicy):
+    """The paper's frequency-based policy: leaders are chosen by LSN
+    arithmetic (lsn % F == 0) — zero shared state added."""
+
+    name = "freq"
+
+    def __init__(self, freq: int):
+        self.freq = int(freq)
+
+    def on_complete(self, log: Log, rec_id: int) -> None:
+        log.force(rec_id, freq=self.freq)
+
+    def vulnerability_bound(self, log: Log) -> Optional[int]:
+        return self.freq * log.cfg.max_threads   # F × T (§4.4)
+
+
+def make_policy(name: str, *, freq: int = 8, group_size: int = 128
+                ) -> ForcePolicy:
+    if name == "sync":
+        return SyncPolicy()
+    if name == "group":
+        return GroupCommitPolicy(group_size)
+    if name == "freq":
+        return FreqPolicy(freq)
+    raise ValueError(f"unknown force policy {name!r}")

@@ -1,0 +1,575 @@
+"""Arcadia: the replicated PMEM log (§4).
+
+Single-primary, multi-backup, single multi-threaded writer.  The write
+path is split into four stages (Table 2) so that only the stages that
+*must* serialize do:
+
+  reserve   — serialized: allocates ring space and the monotonic LSN.
+  copy      — concurrent: writes payload bytes (direct PMEM pointer in
+              fast mode, non-temporal-store cost model).
+  complete  — concurrent: computes the payload CRC, publishes the record
+              header (valid flag), advances the contiguous-complete
+              watermark.
+  force     — serialized per batch: waits for all records up to the
+              target LSN to be complete, then persists + replicates the
+              byte range *in order* (no holes in the committed prefix).
+
+Layout (Fig. 3):
+
+  [ superline: AtomicRegion{epoch, head_lsn, start_lsn, head_off} ]
+  [ ring: circular buffer of records                              ]
+
+  record := | lsn u64 | size u32 | crc u32 | flags u64 | payload.. pad8 |
+
+Integrity of records follows the integrity primitive with the paper's
+optimization: the header is validated by its LSN (recovery knows the
+expected LSN of every slot it scans) instead of a second checksum; the
+payload is validated by CRC32.  The superline uses the atomicity
+primitive with the volatile-index optimization (valid copy = the one
+with the newest (epoch, head_lsn, start_lsn)).
+
+Deviation noted (DESIGN.md §2.3): the paper's recovery iterator stops at
+the first invalid record; taken literally this would truncate the log at
+a mid-log `cleanup`.  We write a CLEANED tombstone flag (CRC preserved)
+so the scan can step over reclaimed records — same guarantees, no
+truncation.
+"""
+
+from __future__ import annotations
+
+import struct
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from .pmem import PMEMDevice
+from .primitives import (AtomicRegion, REP_LF, write_and_force)
+from .transport import QuorumError, ReplicationGroup
+
+crc32 = zlib.crc32
+
+# ---------------------------------------------------------------------- #
+# on-media structures
+# ---------------------------------------------------------------------- #
+_REC_HDR = struct.Struct("<QIIQ")     # lsn, size, crc, flags
+REC_HDR_SIZE = _REC_HDR.size          # 24
+
+FLAG_VALID = 1 << 0
+FLAG_PAD = 1 << 1
+FLAG_CLEANED = 1 << 2
+
+_SUPER = struct.Struct("<IIQQQQQ")    # magic, version, epoch, head_lsn,
+SUPER_MAGIC = 0xA3CAD1A0              # start_lsn, head_off, capacity
+SUPER_VERSION = 1
+SUPERLINE_SIZE = _SUPER.size          # 44 -> AtomicRegion pads internally
+
+
+def _align8(n: int) -> int:
+    return (n + 7) & ~7
+
+
+@dataclass
+class Superline:
+    epoch: int
+    head_lsn: int
+    start_lsn: int
+    head_off: int
+    capacity: int
+
+    def pack(self) -> bytes:
+        return _SUPER.pack(SUPER_MAGIC, SUPER_VERSION, self.epoch,
+                           self.head_lsn, self.start_lsn, self.head_off,
+                           self.capacity)
+
+    @classmethod
+    def unpack(cls, raw: bytes) -> Optional["Superline"]:
+        try:
+            magic, ver, epoch, head_lsn, start_lsn, head_off, cap = \
+                _SUPER.unpack(raw[:_SUPER.size])
+        except struct.error:
+            return None
+        if magic != SUPER_MAGIC or ver != SUPER_VERSION:
+            return None
+        return cls(epoch, head_lsn, start_lsn, head_off, cap)
+
+
+def superline_region(dev: PMEMDevice,
+                     repl: Optional[ReplicationGroup] = None,
+                     ordering: str = REP_LF) -> AtomicRegion:
+    return AtomicRegion(dev, 0, SUPERLINE_SIZE, repl=repl, ordering=ordering,
+                        volatile_index=True)
+
+
+def ring_offset() -> int:
+    r = AtomicRegion(PMEMDevice(4096), 0, SUPERLINE_SIZE,
+                     volatile_index=True).total_size()
+    return _align8(r) + 8  # + guard
+
+
+def _rec_crc(lsn: int, size: int, payload) -> int:
+    """Payload CRC seeded with (lsn, size).
+
+    Plain crc32(payload) has a soundness hole our crash property tests
+    found: a torn header on zeroed media yields (size=0, crc=0), and
+    crc32(b"") == 0, so a torn record would validate as an empty one.
+    Seeding the CRC with the header prefix makes the checksum cover the
+    fields the LSN-based header check doesn't.
+    """
+    return crc32(payload, crc32(struct.pack("<QI", lsn, size)))
+
+
+# record states (volatile tracking)
+RESERVED, COMPLETED, FORCED = 0, 1, 2
+
+
+@dataclass
+class _Rec:
+    lsn: int
+    off: int            # header offset in device space
+    size: int           # payload bytes
+    extent: int         # total bytes incl. header + pad
+    state: int = RESERVED
+    pad: bool = False
+
+
+class LogError(Exception):
+    pass
+
+
+class LogFullError(LogError):
+    pass
+
+
+class CorruptLogError(LogError):
+    pass
+
+
+@dataclass
+class LogConfig:
+    capacity: int = 1 << 20          # ring bytes (excl. superline)
+    write_quorum: int = 1
+    ordering: str = REP_LF
+    local_durable: bool = True       # False => remote-only mode
+    max_threads: int = 64            # T in the F x T bound
+
+
+class Log:
+    """The Arcadia log over one local device + optional replication group."""
+
+    def __init__(self, dev: PMEMDevice, cfg: LogConfig,
+                 repl: Optional[ReplicationGroup] = None):
+        self.dev = dev
+        self.cfg = cfg
+        self.repl = repl
+        self.ring_off = ring_offset()
+        if cfg.capacity % 8 != 0 or cfg.capacity < 64:
+            raise ValueError("ring capacity must be 8-byte aligned and >= 64")
+        if cfg.capacity + self.ring_off > dev.size:
+            raise ValueError("device too small for configured capacity")
+        self._super = superline_region(dev, repl, cfg.ordering)
+
+        self._alloc_lock = threading.Lock()
+        self._commit_cv = threading.Condition()
+
+        # volatile write-path state (rebuilt by recovery)
+        self._recs: Dict[int, _Rec] = {}
+        self._next_lsn = 1
+        self._tail_off = 0            # ring-relative next alloc offset
+        self._used = 0                # live bytes in ring
+        self._complete_upto = 0       # all lsn <= this are COMPLETED
+        self._durable_lsn = 0         # all lsn <= this are durable (in order)
+        self._durable_off = 0         # ring-relative first un-forced byte
+        self._force_busy = False
+        self._epoch = 1
+        self._head_lsn = 1
+        self._head_off = 0
+        self._start_lsn = 1
+        self.force_vns_total = 0.0    # accumulated modelled hardware ns
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def create(cls, dev: PMEMDevice, cfg: LogConfig,
+               repl: Optional[ReplicationGroup] = None) -> "Log":
+        log = cls(dev, cfg, repl)
+        log._write_superline()
+        return log
+
+    @classmethod
+    def open(cls, dev: PMEMDevice, cfg: LogConfig,
+             repl: Optional[ReplicationGroup] = None) -> "Log":
+        """Local (single-copy) recovery: §4.3 Recovery Iterator."""
+        log = cls(dev, cfg, repl)
+        log._recover_local()
+        return log
+
+    def _write_superline(self) -> float:
+        s = Superline(self._epoch, self._head_lsn, self._start_lsn,
+                      self._head_off, self.cfg.capacity)
+        return self._super.atomic_write(s.pack().ljust(SUPERLINE_SIZE, b"\0"))
+
+    @staticmethod
+    def _superline_score(raw: bytes) -> tuple:
+        s = Superline.unpack(raw)
+        if s is None:
+            return (-1, -1, -1)
+        return (s.epoch, s.head_lsn, s.start_lsn)
+
+    def read_superline(self) -> Optional[Superline]:
+        raw = self._super.recover(chooser=lambda d: self._superline_score(d))
+        return Superline.unpack(raw) if raw is not None else None
+
+    # ------------------------------------------------------------------ #
+    # write path
+    # ------------------------------------------------------------------ #
+    def _abs(self, ring_rel: int) -> int:
+        return self.ring_off + ring_rel
+
+    def _fit(self, size: int) -> Tuple[int, Optional[int]]:
+        """Find space for header+payload at the tail; returns
+        (record_ring_off, pad_extent | None if no pad record needed)."""
+        extent = _align8(REC_HDR_SIZE + size)
+        room = self.cfg.capacity - self._tail_off
+        if extent <= room:
+            return self._tail_off, None
+        # need to wrap: burn the remainder with a PAD record (or implicit
+        # skip when not even a header fits — scan applies the same rule)
+        return 0, room
+
+    def reserve(self, size: int) -> Tuple[int, Optional[memoryview]]:
+        """Serialized: allocate space + LSN.  Returns (id, direct pointer).
+
+        The id *is* the LSN (getLSN is the identity map — kept in the API
+        for fidelity with Table 2).  The pointer is None in strict device
+        mode; use copy() then.
+        """
+        if size < 0 or _align8(REC_HDR_SIZE + size) > self.cfg.capacity:
+            raise ValueError("bad record size")
+        with self._alloc_lock:
+            off, pad_room = self._fit(size)
+            extent = _align8(REC_HDR_SIZE + size)
+            need = extent + (pad_room or 0)
+            if self._used + need > self.cfg.capacity:
+                raise LogFullError(
+                    f"log full: used={self._used} need={need} "
+                    f"cap={self.cfg.capacity}")
+            if pad_room is not None and pad_room >= REC_HDR_SIZE:
+                pad_lsn = self._next_lsn
+                self._next_lsn += 1
+                self._write_header(pad_room_off := self._tail_off, pad_lsn,
+                                   pad_room - REC_HDR_SIZE, 0,
+                                   FLAG_VALID | FLAG_PAD)
+                pr = _Rec(pad_lsn, self._abs(pad_room_off),
+                          pad_room - REC_HDR_SIZE, pad_room, state=COMPLETED,
+                          pad=True)
+                self._recs[pad_lsn] = pr
+                self._mark_complete(pad_lsn)
+            lsn = self._next_lsn
+            self._next_lsn += 1
+            rec = _Rec(lsn, self._abs(off), size, extent)
+            self._recs[lsn] = rec
+            self._tail_off = off + extent
+            self._used += need
+            # header published now with flags=0 (not yet valid)
+            self._write_header(off, lsn, size, 0, 0)
+        return lsn, self.dev.view(rec.off + REC_HDR_SIZE, size)
+
+    def _write_header(self, ring_off: int, lsn: int, size: int, crc: int,
+                      flags: int) -> float:
+        return self.dev.write(self._abs(ring_off),
+                              _REC_HDR.pack(lsn, size, crc, flags))
+
+    def getLSN(self, rec_id: int) -> int:
+        return rec_id
+
+    def copy(self, rec_id: int, data: bytes, at: int = 0) -> float:
+        """Concurrent: copy payload bytes into the reserved record
+        (non-temporal-store path)."""
+        rec = self._recs[rec_id]
+        if at + len(data) > rec.size:
+            raise ValueError("copy out of record bounds")
+        return self.dev.write(rec.off + REC_HDR_SIZE + at, data)
+
+    def complete(self, rec_id: int) -> float:
+        """Concurrent: checksum the payload and publish the valid header."""
+        rec = self._recs[rec_id]
+        view = self.dev.view(rec.off + REC_HDR_SIZE, rec.size)
+        payload = view if view is not None else self.dev.read(
+            rec.off + REC_HDR_SIZE, rec.size)
+        crc = _rec_crc(rec.lsn, rec.size, payload)
+        vns = self.dev.write(
+            rec.off, _REC_HDR.pack(rec.lsn, rec.size, crc, FLAG_VALID))
+        vns += self.dev.cost.crc_byte_ns * rec.size
+        self._mark_complete(rec_id)
+        return vns
+
+    def _mark_complete(self, rec_id: int) -> None:
+        with self._commit_cv:
+            self._recs[rec_id].state = COMPLETED
+            while True:
+                nxt = self._recs.get(self._complete_upto + 1)
+                if nxt is None or nxt.state < COMPLETED:
+                    break
+                self._complete_upto += 1
+            self._commit_cv.notify_all()
+
+    # -- force ----------------------------------------------------------- #
+    def force(self, rec_id: int, freq: int = 1,
+              timeout: Optional[float] = None) -> int:
+        """Make records durable in order.
+
+        With ``freq`` F > 1, only a call whose LSN ≡ 0 (mod F) forces; it
+        becomes the *force leader* for every unforced record up to its own
+        LSN (§4.4).  Other calls return immediately (their durability is
+        covered by a later leader — bounded by the F×T window).
+
+        Returns the durable LSN watermark at return time.  Raises
+        QuorumError if replication cannot meet W.
+        """
+        lsn = rec_id
+        if freq > 1 and lsn % freq != 0:
+            with self._commit_cv:
+                return self._durable_lsn
+        with self._commit_cv:
+            # total order: wait for every earlier record to be complete
+            ok = self._commit_cv.wait_for(
+                lambda: self._complete_upto >= lsn, timeout=timeout)
+            if not ok:
+                raise LogError(f"force({lsn}) timed out waiting for "
+                               f"complete_upto={self._complete_upto}")
+            # in-order commit: one force at a time; earlier leader may have
+            # already covered us
+            ok = self._commit_cv.wait_for(
+                lambda: self._durable_lsn >= lsn or not self._force_busy,
+                timeout=timeout)
+            if not ok:
+                raise LogError(f"force({lsn}) timed out on earlier force")
+            if self._durable_lsn >= lsn:
+                return self._durable_lsn
+            self._force_busy = True
+            start_off = self._durable_off
+            end_rec = self._recs[lsn]
+            end_off = (end_rec.off - self.ring_off) + end_rec.extent
+        try:
+            vns = self._persist_range(start_off, end_off)
+        except Exception:
+            with self._commit_cv:
+                self._force_busy = False
+                self._commit_cv.notify_all()
+            raise
+        with self._commit_cv:
+            self._durable_lsn = max(self._durable_lsn, lsn)
+            self._durable_off = end_off % self.cfg.capacity
+            self._force_busy = False
+            self.force_vns_total += vns
+            self._commit_cv.notify_all()
+            return self._durable_lsn
+
+    def _persist_range(self, start: int, end: int) -> float:
+        """Persist+replicate ring-relative [start, end), handling wrap."""
+        vns = 0.0
+        if end == start:
+            return vns
+        segs: List[Tuple[int, int]]
+        if end > start:
+            segs = [(start, end - start)]
+        else:
+            segs = [(start, self.cfg.capacity - start), (0, end)]
+        for off, n in segs:
+            if n == 0:
+                continue
+            vns += write_and_force(self.dev, self._abs(off), n, self.repl,
+                                   self.cfg.ordering,
+                                   local_durable=self.cfg.local_durable)
+        return vns
+
+    def append(self, data: bytes, freq: int = 1) -> int:
+        """Convenience bundle of reserve+copy+complete+force (Table 2)."""
+        rec_id, view = self.reserve(len(data))
+        if view is not None:
+            view[:] = data
+        else:
+            self.copy(rec_id, data)
+        self.complete(rec_id)
+        self.force(rec_id, freq=freq)
+        return rec_id
+
+    def append_timed(self, data: bytes, freq: int = 1
+                     ) -> Tuple[int, float]:
+        """append + modelled hardware ns (benchmark instrumentation)."""
+        v0 = self.force_vns_total
+        rec_id, view = self.reserve(len(data))
+        vns = 0.0
+        if view is not None:
+            view[:] = data
+            vns += self.dev.cost.store_byte_ns * len(data)
+        else:
+            vns += self.copy(rec_id, data)
+        vns += self.complete(rec_id)
+        self.force(rec_id, freq=freq)
+        with self._commit_cv:
+            vns += self.force_vns_total - v0
+        return rec_id, vns
+
+    # observability ------------------------------------------------------ #
+    @property
+    def durable_lsn(self) -> int:
+        with self._commit_cv:
+            return self._durable_lsn
+
+    @property
+    def completed_lsn(self) -> int:
+        with self._commit_cv:
+            return self._complete_upto
+
+    @property
+    def next_lsn(self) -> int:
+        with self._alloc_lock:
+            return self._next_lsn
+
+    def vulnerability_window(self) -> int:
+        """Completed-but-unforced records (Fig. 8c/d metric)."""
+        with self._commit_cv:
+            return max(0, self._complete_upto - self._durable_lsn)
+
+    def vulnerability_bound(self, freq: int) -> int:
+        """Theoretical worst case F × T (§4.4)."""
+        return freq * self.cfg.max_threads
+
+    # ------------------------------------------------------------------ #
+    # space reclamation
+    # ------------------------------------------------------------------ #
+    def cleanup(self, rec_id: int) -> float:
+        """Tombstone one record; advance the head over any contiguous
+        reclaimed prefix and publish it in the superline."""
+        with self._alloc_lock:
+            rec = self._recs.get(rec_id)
+            if rec is None:
+                return 0.0
+            raw = self.dev.read(rec.off, REC_HDR_SIZE)
+            lsn, size, crc, flags = _REC_HDR.unpack(raw)
+            vns = self.dev.write(rec.off, _REC_HDR.pack(
+                lsn, size, crc, (flags | FLAG_CLEANED) & ~FLAG_VALID))
+            vns += write_and_force(self.dev, rec.off, REC_HDR_SIZE, self.repl,
+                                   self.cfg.ordering,
+                                   local_durable=self.cfg.local_durable)
+            # advance head over contiguous cleaned/pad records
+            advanced = False
+            while True:
+                head = self._recs.get(self._head_lsn)
+                if head is None:
+                    break
+                hraw = self.dev.read(head.off, REC_HDR_SIZE)
+                _, _, _, hflags = _REC_HDR.unpack(hraw)
+                reclaimable = head.pad or (hflags & FLAG_CLEANED)
+                if not reclaimable or self._head_lsn > self._durable_lsn:
+                    break
+                self._used -= head.extent
+                self._head_off = (head.off - self.ring_off + head.extent) \
+                    % self.cfg.capacity
+                del self._recs[self._head_lsn]
+                self._head_lsn += 1
+                advanced = True
+            if advanced:
+                vns += self._write_superline()
+            return vns
+
+    def cleanupAll(self) -> float:
+        """Reinitialize the whole log, preserving the epoch (§4.3)."""
+        with self._alloc_lock, self._commit_cv:
+            self._recs.clear()
+            self._head_lsn = self._start_lsn = self._next_lsn
+            self._head_off = self._tail_off = 0
+            self._used = 0
+            self._complete_upto = self._durable_lsn = self._next_lsn - 1
+            self._durable_off = 0
+            return self._write_superline()
+
+    # ------------------------------------------------------------------ #
+    # recovery (local copy)
+    # ------------------------------------------------------------------ #
+    def _scan_record(self, ring_off: int, expect_lsn: int
+                     ) -> Optional[Tuple[_Rec, int]]:
+        """Validate the record at ring_off against the expected LSN.
+        Returns (rec, flags) or None if the scan must stop here."""
+        raw = self.dev.read(self._abs(ring_off), REC_HDR_SIZE)
+        lsn, size, crc, flags = _REC_HDR.unpack(raw)
+        if lsn != expect_lsn:
+            return None
+        if ring_off + _align8(REC_HDR_SIZE + size) > self.cfg.capacity \
+                and not (flags & FLAG_PAD):
+            return None
+        if not (flags & (FLAG_VALID | FLAG_CLEANED)):
+            return None  # reserved but never completed => end of log
+        if flags & FLAG_VALID and not (flags & (FLAG_PAD | FLAG_CLEANED)):
+            payload = self.dev.read(self._abs(ring_off) + REC_HDR_SIZE, size)
+            if _rec_crc(lsn, size, payload) != crc:
+                return None
+        rec = _Rec(lsn, self._abs(ring_off), size,
+                   _align8(REC_HDR_SIZE + size), state=FORCED,
+                   pad=bool(flags & FLAG_PAD))
+        return rec, flags
+
+    def _recover_local(self) -> None:
+        s = self.read_superline()
+        if s is None:
+            raise CorruptLogError("no valid superline copy")
+        if s.capacity != self.cfg.capacity:
+            raise CorruptLogError(
+                f"capacity mismatch: media={s.capacity} cfg={self.cfg.capacity}")
+        self._epoch = s.epoch
+        self._head_lsn = s.head_lsn
+        self._start_lsn = s.start_lsn
+        self._head_off = s.head_off
+        # scan forward from the head to find the tail (§4.1: no tail pointer)
+        pos, lsn = s.head_off, s.head_lsn
+        used = 0
+        while used < self.cfg.capacity:
+            if self.cfg.capacity - pos < REC_HDR_SIZE and pos != 0:
+                used += self.cfg.capacity - pos
+                pos = 0  # slot too small for a header: implicit wrap
+                continue
+            got = self._scan_record(pos, lsn)
+            if got is None:
+                break
+            rec, flags = got
+            self._recs[lsn] = rec
+            used += rec.extent
+            nxt = pos + rec.extent
+            pos = 0 if nxt >= self.cfg.capacity else nxt
+            lsn += 1
+        self._next_lsn = lsn
+        self._tail_off = pos
+        self._used = used
+        self._complete_upto = self._durable_lsn = lsn - 1
+        self._durable_off = pos
+
+    def iter_records(self) -> Iterator[Tuple[int, bytes]]:
+        """Recovery iterator: yields (lsn, payload) for every live record
+        from the head, skipping pads and tombstones (§4.3)."""
+        with self._alloc_lock:
+            items = sorted(self._recs.items())
+        for lsn, rec in items:
+            if rec.pad:
+                continue
+            raw = self.dev.read(rec.off, REC_HDR_SIZE)
+            _, size, crc, flags = _REC_HDR.unpack(raw)
+            if not (flags & FLAG_VALID) or (flags & FLAG_CLEANED):
+                continue
+            payload = self.dev.read(rec.off + REC_HDR_SIZE, size)
+            if _rec_crc(lsn, size, payload) != crc:
+                raise CorruptLogError(
+                    f"record {lsn}: payload CRC mismatch after recovery")
+            yield lsn, payload
+
+    begin = iter_records   # Table-2 naming
+
+    # -- stats ------------------------------------------------------------ #
+    def stats(self) -> dict:
+        with self._commit_cv:
+            return dict(next_lsn=self._next_lsn, head_lsn=self._head_lsn,
+                        durable_lsn=self._durable_lsn,
+                        complete_upto=self._complete_upto, used=self._used,
+                        epoch=self._epoch, capacity=self.cfg.capacity)

@@ -1,0 +1,280 @@
+"""Simulated persistent-memory device with explicit volatility semantics.
+
+The paper's correctness arguments all rest on three hardware facts about
+PMEM (Optane DCPMM behind the x86 cache hierarchy):
+
+  1. Stores are *volatile* until the cache line has been written back
+     (clwb/clflushopt) and a fence has retired (sfence).
+  2. Persistence granularity/atomicity is 8 bytes: on power loss an
+     in-flight cache-line writeback may tear at any 8-byte boundary, and
+     dirty lines may reach the media in *any order* (implicit evictions).
+  3. Media errors / stray writes can silently corrupt persisted bytes.
+
+``PMEMDevice`` models exactly these semantics so crash-consistency can be
+*property-tested* rather than asserted.  Two modes:
+
+  * ``strict``  — full volatile-overlay model at 8-byte granularity.
+                  ``crash()`` keeps an arbitrary subset of unflushed units
+                  (torn + reordered writes).  Used by correctness tests.
+  * ``fast``    — writes go straight to a NumPy buffer (a write-through
+                  view of the same semantics: everything a crash *may*
+                  persist).  Used by benchmarks where we measure real
+                  software cost (copies, checksums, locking).
+
+Because this container has no Optane or RDMA NIC, hardware wait times are
+accounted in *virtual nanoseconds* via ``CostModel``: every operation
+returns the modelled ns it would take on the paper's testbed (Cascade
+Lake + DCPMM + EDR InfiniBand).  Real compute (memcpy, CRC) is measured
+with the wall clock and folded into the same figure.  Benchmarks report
+both clocks; see DESIGN.md §2.3.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Set
+
+import numpy as np
+
+CACHE_LINE = 64  # bytes, x86
+ATOM = 8         # PMEM atomic persist unit, bytes
+
+
+@dataclass
+class CostModel:
+    """Virtual-time constants, calibrated to the paper's testbed numbers.
+
+    Defaults give: 1KB local persist ~ 1.1us, 1KB replicated write ~ 4.5us
+    (one round trip), matching the magnitudes in Fig. 5b / Fig. 6.
+    """
+
+    fence_ns: float = 100.0           # sfence drain
+    line_writeback_ns: float = 60.0   # clwb per dirty line (async, overlapped)
+    store_byte_ns: float = 0.12       # ntstore bandwidth ~ 8 GB/s
+    pmem_read_byte_ns: float = 0.06   # PMEM read bandwidth ~ 16 GB/s
+    rdma_rtt_ns: float = 3000.0       # EDR IB small-message round trip
+    rdma_byte_ns: float = 0.085       # ~ 11.7 GB/s effective wire bandwidth
+    llc_miss_ns: float = 80.0         # NIC DMA read that misses LLC (per line)
+    crc_byte_ns: float = 0.25         # crc32 software cost (accounted, not spun)
+
+
+@dataclass
+class DeviceStats:
+    """Observable hardware-event counters (the paper reads these via PCM)."""
+
+    writes: int = 0
+    bytes_written: int = 0
+    flushes: int = 0
+    lines_flushed: int = 0
+    fences: int = 0
+    llc_misses: int = 0          # lines read by DMA that were not cache-resident
+    llc_hits: int = 0
+    media_errors_injected: int = 0
+
+    def snapshot(self) -> "DeviceStats":
+        return DeviceStats(**self.__dict__)
+
+
+class PMEMDevice:
+    """A byte-addressable persistent memory device (one DAX-mapped file)."""
+
+    def __init__(
+        self,
+        size: int,
+        mode: str = "fast",
+        cost: Optional[CostModel] = None,
+        name: str = "pmem0",
+    ):
+        if mode not in ("fast", "strict"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.size = int(size)
+        self.mode = mode
+        self.cost = cost or CostModel()
+        self.name = name
+        self.stats = DeviceStats()
+        self._lock = threading.Lock()
+        # Durable image: what survives power loss *for sure*.
+        self._durable = np.zeros(self.size, dtype=np.uint8)
+        # strict mode: volatile overlay, keyed by 8-byte-aligned offset.
+        self._volatile: Dict[int, bytes] = {}
+        # Cache-residency of lines (True while dirty in LLC).  Used for the
+        # Fig. 6 effect: flushing evicts lines, so a subsequent NIC DMA read
+        # misses LLC and must re-read from PMEM.  (clwb was implemented as an
+        # evicting flush on the paper's CPUs — footnote 5.)
+        self._resident_lines: Set[int] = set()
+
+    # ------------------------------------------------------------------ #
+    # store / load
+    # ------------------------------------------------------------------ #
+    def write(self, off: int, data: bytes | bytearray | memoryview | np.ndarray) -> float:
+        """CPU stores to [off, off+len). Volatile until persisted. Returns vns."""
+        data = _as_bytes(data)
+        n = len(data)
+        self._check(off, n)
+        if self.mode == "fast":
+            self._durable[off : off + n] = np.frombuffer(data, dtype=np.uint8)
+        else:
+            self._write_strict(off, data)
+        with self._lock:
+            self.stats.writes += 1
+            self.stats.bytes_written += n
+            self._resident_lines.update(_lines(off, n))
+        return self.cost.store_byte_ns * n
+
+    def _write_strict(self, off: int, data: bytes) -> None:
+        """Split the store into 8-byte units in the volatile overlay."""
+        with self._lock:
+            pos = off
+            end = off + len(data)
+            while pos < end:
+                unit = pos - (pos % ATOM)
+                lo = max(pos, unit)
+                hi = min(end, unit + ATOM)
+                cur = bytearray(self._read_unit_locked(unit))
+                cur[lo - unit : hi - unit] = data[lo - off : hi - off]
+                self._volatile[unit] = bytes(cur)
+                pos = hi
+
+    def _read_unit_locked(self, unit: int) -> bytes:
+        v = self._volatile.get(unit)
+        if v is not None:
+            return v
+        return self._durable[unit : min(unit + ATOM, self.size)].tobytes()
+
+    def read(self, off: int, n: int) -> bytes:
+        """CPU load: sees the newest (volatile-overlaid) data."""
+        self._check(off, n)
+        if self.mode == "fast" or not self._volatile:
+            return self._durable[off : off + n].tobytes()
+        with self._lock:
+            out = bytearray(self._durable[off : off + n].tobytes())
+            first = off - (off % ATOM)
+            for unit in range(first, off + n, ATOM):
+                v = self._volatile.get(unit)
+                if v is None:
+                    continue
+                lo = max(unit, off)
+                hi = min(unit + len(v), off + n)
+                out[lo - off : hi - off] = v[lo - unit : hi - unit]
+            return bytes(out)
+
+    def view(self, off: int, n: int) -> Optional[memoryview]:
+        """Direct load/store pointer into PMEM (the paper's reserve() returns
+        one).  Only available in fast mode; strict mode callers fall back to
+        ``write``/``read`` so the volatility model stays sound."""
+        self._check(off, n)
+        if self.mode == "fast":
+            return self._durable[off : off + n].data
+        return None
+
+    # ------------------------------------------------------------------ #
+    # persistence primitive (clwb loop + sfence)
+    # ------------------------------------------------------------------ #
+    def persist(self, off: int, n: int) -> float:
+        """Guarantee [off, off+n) is durable.  Returns vns (writeback+fence).
+
+        Evicts the lines from the cache model (see _resident_lines note).
+        """
+        self._check(off, n)
+        lines = _lines(off, n)
+        with self._lock:
+            if self.mode == "strict":
+                first = off - (off % ATOM)
+                for unit in range(first, off + n, ATOM):
+                    v = self._volatile.pop(unit, None)
+                    if v is not None:
+                        self._durable[unit : unit + len(v)] = np.frombuffer(
+                            v, dtype=np.uint8
+                        )
+            dirty = len(lines & self._resident_lines)
+            self._resident_lines -= lines
+            self.stats.flushes += 1
+            self.stats.lines_flushed += dirty
+            self.stats.fences += 1
+        # clwb writebacks overlap; fence waits for the slowest. Model as
+        # per-line issue cost + one fence drain.
+        return self.cost.line_writeback_ns * max(dirty, 1) + self.cost.fence_ns
+
+    def dma_read(self, off: int, n: int) -> tuple[bytes, float]:
+        """Device-side (NIC) read of the *newest* data, as an RDMA HCA would
+        snoop it.  Cost depends on LLC residency: lines evicted by a prior
+        flush must be re-read from PMEM (the Fig. 6 effect)."""
+        data = self.read(off, n)
+        lines = _lines(off, n)
+        with self._lock:
+            miss = len(lines - self._resident_lines)
+            hit = len(lines) - miss
+            self.stats.llc_misses += miss
+            self.stats.llc_hits += hit
+        vns = miss * self.cost.llc_miss_ns + n * self.cost.pmem_read_byte_ns * (
+            miss / max(len(lines), 1)
+        )
+        return data, vns
+
+    # ------------------------------------------------------------------ #
+    # failure injection
+    # ------------------------------------------------------------------ #
+    def crash(self, rng: Optional[np.random.Generator] = None,
+              keep_probability: float = 0.5) -> "PMEMDevice":
+        """Power loss.  Returns the device as found at next boot.
+
+        Every unflushed 8-byte unit independently either reached the media
+        (implicit eviction happened before the crash) or is lost — this
+        realizes both *torn writes* (a record's units split) and *reordered
+        persistence* (later stores survive while earlier ones vanish).
+        """
+        rng = rng or np.random.default_rng(0)
+        survivor = PMEMDevice(self.size, mode=self.mode, cost=self.cost,
+                              name=self.name)
+        with self._lock:
+            survivor._durable[:] = self._durable
+            for unit, v in self._volatile.items():
+                if rng.random() < keep_probability:
+                    survivor._durable[unit : unit + len(v)] = np.frombuffer(
+                        v, dtype=np.uint8
+                    )
+        return survivor
+
+    def corrupt(self, off: int, n: int, rng: Optional[np.random.Generator] = None,
+                nbits: int = 8) -> None:
+        """Inject an undetected media error: flip bits in the durable image."""
+        self._check(off, n)
+        rng = rng or np.random.default_rng(0)
+        with self._lock:
+            for _ in range(nbits):
+                pos = off + int(rng.integers(0, n))
+                self._durable[pos] ^= np.uint8(1 << int(rng.integers(0, 8)))
+            self.stats.media_errors_injected += 1
+
+    # ------------------------------------------------------------------ #
+    def dirty_units(self) -> int:
+        with self._lock:
+            return len(self._volatile)
+
+    def _check(self, off: int, n: int) -> None:
+        if off < 0 or n < 0 or off + n > self.size:
+            raise ValueError(
+                f"access [{off}, {off + n}) out of bounds for {self.name} "
+                f"(size {self.size})"
+            )
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"PMEMDevice({self.name}, size={self.size}, mode={self.mode}, "
+                f"dirty_units={self.dirty_units()})")
+
+
+def _lines(off: int, n: int) -> Set[int]:
+    if n <= 0:
+        return set()
+    first = off // CACHE_LINE
+    last = (off + n - 1) // CACHE_LINE
+    return set(range(first, last + 1))
+
+
+def _as_bytes(data) -> bytes:
+    if isinstance(data, np.ndarray):
+        return data.tobytes()
+    if isinstance(data, (bytearray, memoryview)):
+        return bytes(data)
+    return data

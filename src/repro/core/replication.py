@@ -1,0 +1,106 @@
+"""Replica-set construction for the three deployment modes (§4.1).
+
+  local         — one durable copy on local PMEM, no backups.
+  local+remote  — local primary copy + one or more remote backups.
+  remote_only   — client holds a volatile (DRAM) staging copy; all durable
+                  copies are remote (nodes without PMEM can still log).
+
+A ``ReplicaSet`` owns the devices/servers/transports and builds the
+``ReplicationGroup`` + ``Log`` wired together; tests and benchmarks use it
+as the one-stop fixture, and the cluster manager re-wires it on failover.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .log import Log, LogConfig, ring_offset
+from .pmem import CostModel, PMEMDevice
+from .transport import ReplicaServer, ReplicationGroup, Transport
+
+MODES = ("local", "local+remote", "remote_only")
+
+
+@dataclass
+class ReplicaSet:
+    mode: str
+    cfg: LogConfig
+    primary_id: str
+    primary_dev: PMEMDevice                  # durable copy or DRAM staging
+    servers: List[ReplicaServer] = field(default_factory=list)
+    transports: List[Transport] = field(default_factory=list)
+    group: Optional[ReplicationGroup] = None
+    log: Optional[Log] = None
+
+    @property
+    def n_durable(self) -> int:
+        return len(self.servers) + (1 if self.cfg.local_durable else 0)
+
+    def server_devices(self) -> Dict[str, PMEMDevice]:
+        out = {s.server_id: s.device for s in self.servers}
+        if self.cfg.local_durable:
+            out[self.primary_id] = self.primary_dev
+        return out
+
+    def fail_backup(self, server_id: str) -> None:
+        """Partition / kill one backup: its transport starts timing out."""
+        for t in self.transports:
+            if t.server.server_id == server_id:
+                t.inject(drop=True)
+
+    def shutdown(self) -> None:
+        if self.group:
+            self.group.shutdown()
+
+
+def device_size(capacity: int) -> int:
+    return ring_offset() + capacity + 64
+
+
+def build_replica_set(
+    mode: str = "local",
+    capacity: int = 1 << 20,
+    n_backups: int = 0,
+    write_quorum: Optional[int] = None,
+    device_mode: str = "fast",
+    cost: Optional[CostModel] = None,
+    primary_id: str = "node0",
+    open_existing: bool = False,
+) -> ReplicaSet:
+    """Construct devices + transports + group + log for one deployment."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}")
+    if mode == "local" and n_backups:
+        raise ValueError("local mode has no backups")
+    if mode != "local" and n_backups < 1:
+        raise ValueError(f"{mode} mode needs >= 1 backup")
+    local_durable = mode != "remote_only"
+    n_durable = n_backups + (1 if local_durable else 0)
+    if write_quorum is None:
+        write_quorum = (n_durable // 2) + 1
+    cfg = LogConfig(capacity=capacity, write_quorum=write_quorum,
+                    local_durable=local_durable)
+    size = device_size(capacity)
+    cost = cost or CostModel()
+    # remote-only staging is DRAM: model as fast device (never persisted)
+    primary_dev = PMEMDevice(
+        size, mode=device_mode if local_durable else "fast",
+        cost=cost, name=f"{primary_id}/pmem")
+    servers = [
+        ReplicaServer(PMEMDevice(size, mode=device_mode, cost=cost,
+                                 name=f"node{i + 1}/pmem"),
+                      server_id=f"node{i + 1}")
+        for i in range(n_backups)
+    ]
+    transports = [Transport(s, primary_id=primary_id, cost=cost)
+                  for s in servers]
+    group = ReplicationGroup(transports, write_quorum,
+                             local_is_durable=local_durable) \
+        if (servers or mode != "local") else None
+    rs = ReplicaSet(mode=mode, cfg=cfg, primary_id=primary_id,
+                    primary_dev=primary_dev, servers=servers,
+                    transports=transports, group=group)
+    rs.log = (Log.open if open_existing else Log.create)(
+        primary_dev, cfg, repl=group)
+    return rs

@@ -1,0 +1,247 @@
+"""RDMA transport model: one-sided verbs against a remote PMEM device.
+
+Models the paper's replication fabric (EDR InfiniBand, RDMA-Write-with-
+Immediate) with the properties that matter for correctness and cost:
+
+  * A ``write_imm`` transfers bytes and carries the length as the immediate
+    value; the remote server uses the completion's address + immediate to
+    run the *persistence primitive* and then acks with a Send.  One round
+    trip total (§3, Replication Primitive).
+  * Remote writes land in the remote server's *volatile* domain first (the
+    NIC posts into CPU caches — DDIO), so remote persistence only holds
+    after the remote-side force.  ``handle_write_imm`` performs both.
+  * The NIC reads the source buffer by DMA: lines evicted from LLC by a
+    prior local flush must be fetched from PMEM (Fig. 6 effect) —
+    accounted by ``PMEMDevice.dma_read``.
+  * Failures: a transport can be set to drop traffic (network partition /
+    backup death ⇒ timeout) and servers can *fence* old primaries by epoch
+    (§4.2 Handling Primary Failure).
+
+All hardware waits are virtual ns (see ``CostModel``); data movement is
+real (bytes really land in the backup's device) so recovery tests operate
+on true content.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from .pmem import CostModel, PMEMDevice
+
+
+class TransportError(Exception):
+    """Timeout / partition / fencing failure on a transport."""
+
+
+class QuorumError(Exception):
+    """Fewer than W replicas acknowledged a forced write."""
+
+
+class ReplicaServer:
+    """A backup node: hosts one PMEM device and the write_imm handler."""
+
+    def __init__(self, device: PMEMDevice, server_id: str):
+        self.device = device
+        self.server_id = server_id
+        self._fenced: set[str] = set()
+        self._epoch = 1
+        self._lock = threading.Lock()
+
+    # -- membership / fencing ------------------------------------------- #
+    def fence(self, primary_id: str) -> None:
+        """Close connections from an old primary (called on leader change)."""
+        with self._lock:
+            self._fenced.add(primary_id)
+
+    def unfence_all(self) -> None:
+        with self._lock:
+            self._fenced.clear()
+
+    def set_epoch(self, epoch: int) -> None:
+        with self._lock:
+            self._epoch = epoch
+
+    @property
+    def epoch(self) -> int:
+        with self._lock:
+            return self._epoch
+
+    def is_fenced(self, primary_id: str) -> bool:
+        with self._lock:
+            return primary_id in self._fenced
+
+    # -- verbs ------------------------------------------------------------ #
+    def handle_write_imm(self, dst_off: int, data: bytes, primary_id: str) -> float:
+        """RDMA-Write lands in the volatile domain; the immediate-value
+        completion triggers the persistence primitive; then ack."""
+        if self.is_fenced(primary_id):
+            raise TransportError(
+                f"{self.server_id}: primary {primary_id} is fenced off")
+        vns = self.device.write(dst_off, data)       # NIC -> caches (volatile)
+        vns += self.device.persist(dst_off, len(data))  # force to PMEM
+        return vns
+
+    def handle_read(self, off: int, n: int) -> Tuple[bytes, float]:
+        data, vns = self.device.dma_read(off, n)
+        return data, vns
+
+
+@dataclass
+class FailureSpec:
+    """Failure injection for one transport."""
+
+    drop: bool = False          # partition: all ops time out
+    fail_after_ops: int = -1    # fail once op counter passes this (-1 = never)
+
+
+class Transport:
+    """A reliable-connection QP from the primary to one backup."""
+
+    def __init__(self, server: ReplicaServer, primary_id: str,
+                 cost: Optional[CostModel] = None,
+                 timeout_ns: float = 1e9):
+        self.server = server
+        self.primary_id = primary_id
+        self.cost = cost or CostModel()
+        self.timeout_ns = timeout_ns
+        self.failure = FailureSpec()
+        self._ops = 0
+        self._closed = False
+
+    # -- failure control --------------------------------------------------- #
+    def inject(self, **kw) -> None:
+        self.failure = FailureSpec(**kw)
+
+    def close(self) -> None:
+        self._closed = True
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def _gate(self) -> None:
+        self._ops += 1
+        if self._closed:
+            raise TransportError("transport closed")
+        if self.failure.drop:
+            raise TransportError(f"timeout after {self.timeout_ns:.0f} vns "
+                                 f"(partition to {self.server.server_id})")
+        if 0 <= self.failure.fail_after_ops < self._ops:
+            raise TransportError(
+                f"backup {self.server.server_id} failed (injected)")
+
+    # -- verbs ------------------------------------------------------------ #
+    def write_imm(self, src_dev: PMEMDevice, src_off: int, dst_off: int,
+                  n: int) -> float:
+        """Replication primitive wire op: one round trip, remote force, ack.
+
+        Returns virtual ns from posting the WQE to receiving the ack.
+        """
+        self._gate()
+        data, read_vns = src_dev.dma_read(src_off, n)   # NIC DMA of source
+        wire_vns = self.cost.rdma_rtt_ns + n * self.cost.rdma_byte_ns
+        remote_vns = self.server.handle_write_imm(dst_off, data,
+                                                  self.primary_id)
+        return read_vns + wire_vns + remote_vns
+
+    def write_imm_bytes(self, data: bytes, dst_off: int) -> float:
+        """Same, but the source is a registered DRAM buffer (remote-only
+        mode): no LLC-miss modelling on the source side."""
+        self._gate()
+        wire_vns = self.cost.rdma_rtt_ns + len(data) * self.cost.rdma_byte_ns
+        remote_vns = self.server.handle_write_imm(dst_off, data,
+                                                  self.primary_id)
+        return wire_vns + remote_vns
+
+    def read(self, off: int, n: int) -> Tuple[bytes, float]:
+        """One-sided RDMA Read (recovery/repair path)."""
+        self._gate()
+        data, remote_vns = self.server.handle_read(off, n)
+        return data, self.cost.rdma_rtt_ns + n * self.cost.rdma_byte_ns + remote_vns
+
+
+class ReplicationGroup:
+    """Primary-side fan-out to all backups with write-quorum semantics.
+
+    Writes are issued to every live backup in parallel (the paper: "RDMA
+    Writes are initiated to all backups in parallel"); completion is the
+    W-th fastest ack.  A timed-out/failed backup is evicted (connection
+    closed) so a transient partition cannot leave an inconsistent backup
+    attached (§4.2 Replication).
+    """
+
+    def __init__(self, transports: List[Transport], write_quorum: int,
+                 local_is_durable: bool = True):
+        self.transports = list(transports)
+        self.write_quorum = int(write_quorum)
+        self.local_is_durable = bool(local_is_durable)
+        n = self.n_replicas
+        if not (0 < self.write_quorum <= n):
+            raise ValueError(f"W={write_quorum} invalid for N={n}")
+        self._pool = (ThreadPoolExecutor(max_workers=max(1, len(transports)),
+                                         thread_name_prefix="repl")
+                      if transports else None)
+
+    # N and R per §4.2: R + W > N  =>  R = N - W + 1
+    @property
+    def n_replicas(self) -> int:
+        return len(self.transports) + (1 if self.local_is_durable else 0)
+
+    @property
+    def read_quorum(self) -> int:
+        return self.n_replicas - self.write_quorum + 1
+
+    def live_transports(self) -> List[Transport]:
+        return [t for t in self.transports if not t.closed]
+
+    def replicate(self, src_dev: PMEMDevice, src_off: int, dst_off: int,
+                  n: int, local_ack_vns: float = 0.0) -> float:
+        """Replicate+force [src_off, src_off+n) to every backup; wait for a
+        write quorum of acks.  ``local_ack_vns`` is the completion time of
+        the local durable copy (0 if none / already persisted).
+
+        Returns the vns at which the W-th ack arrived.  Raises QuorumError
+        if the quorum cannot be met; failed backups are evicted first.
+        """
+        acks: List[float] = []
+        if self.local_is_durable:
+            acks.append(local_ack_vns)
+        live = self.live_transports()
+        if live:
+            futs = {self._pool.submit(t.write_imm, src_dev, src_off, dst_off, n): t
+                    for t in live}
+            for fut, t in futs.items():
+                try:
+                    acks.append(fut.result())
+                except TransportError:
+                    t.close()   # evict: avoids inconsistent half-attached backup
+        if len(acks) < self.write_quorum:
+            raise QuorumError(
+                f"write quorum {self.write_quorum} not met "
+                f"({len(acks)}/{self.n_replicas} acks)")
+        acks.sort()
+        return acks[self.write_quorum - 1]
+
+    def broadcast_bytes(self, data: bytes, dst_off: int) -> float:
+        """Replicate a small DRAM buffer (superline updates, epoch bumps)."""
+        acks: List[float] = []
+        if self.local_is_durable:
+            acks.append(0.0)
+        for t in self.live_transports():
+            try:
+                acks.append(t.write_imm_bytes(data, dst_off))
+            except TransportError:
+                t.close()
+        if len(acks) < self.write_quorum:
+            raise QuorumError(
+                f"write quorum {self.write_quorum} not met "
+                f"({len(acks)}/{self.n_replicas} acks)")
+        acks.sort()
+        return acks[self.write_quorum - 1]
+
+    def shutdown(self) -> None:
+        if self._pool:
+            self._pool.shutdown(wait=False)

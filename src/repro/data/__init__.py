@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticDataset
+
+__all__ = ["DataConfig", "SyntheticDataset"]

@@ -1,0 +1,241 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Every parameter leaf gets a tuple of *logical* dim names derived from
+its path (pattern table below); logical names map to prioritized mesh
+axes; the first mesh axis that (a) divides the dim and (b) is not
+already used by another dim of the same leaf wins.  This one table is
+the hillclimbing surface for the §Perf sharding iterations.
+
+Defaults:
+  tensor-parallel ("model"): vocab, heads/kv_heads/q_per_kv/head,
+      mlp hidden, experts (EP), ssm inner channels
+  fully-sharded ("data" [+ "pod"]): embed/feature dims of weights (ZeRO-3)
+  batch ("pod","data"): activation batch dims
+  sequence ("model"): KV-cache length when the batch can't fill the data
+      axis (long-context decode SP)
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# path-pattern -> logical dim names (matched against keystr of the leaf,
+# AFTER the stacked "blocks" leading 'layers' dim is accounted for)
+_PATTERNS = [
+    (r"embed.*\['w'\]$", ("vocab", "embed")),
+    (r"lm_head.*\['w'\]$", ("embed", "vocab")),
+    (r"(frame|patch)_proj.*\['w'\]$", ("frontend", "embed")),
+    (r"attn'\]\['wq'\]$", ("embed", "kv_heads", "q_per_kv", "head")),
+    (r"attn'\]\['wk'\]$", ("embed", "kv_heads", "head")),
+    (r"attn'\]\['wv'\]$", ("embed", "kv_heads", "head")),
+    (r"attn'\]\['wo'\]$", ("kv_heads", "q_per_kv", "head", "embed")),
+    (r"attn'\]\['bq'\]$", ("kv_heads", "q_per_kv", "head")),
+    (r"attn'\]\['b[kv]'\]$", ("kv_heads", "head")),
+    (r"attn'\]\['wq_a'\]$", ("embed", "lora")),
+    (r"attn'\]\['wq_b'\]$", ("lora", "heads", "head")),
+    (r"attn'\]\['wkv_a'\]$", ("embed", "lora")),
+    (r"attn'\]\['wkv_b'\]$", ("lora", "heads", "head")),
+    (r"attn'\]\['wo_mla'\]$", ("heads", "head", "embed")),
+    (r"router'\]$", ("embed", "expert")),
+    (r"experts'\]\['wi'\]$", ("expert", "embed", "act", "mlp")),
+    (r"experts'\]\['wo'\]$", ("expert", "mlp", "embed")),
+    (r"ffn'\]\['wi'\]$", ("embed", "act", "mlp")),
+    (r"ffn'\]\['wo'\]$", ("mlp", "embed")),
+    (r"shared'\]\['wi'\]$", ("embed", "act", "mlp")),
+    (r"shared'\]\['wo'\]$", ("mlp", "embed")),
+    (r"ssm'\]\['in_proj'\]$", ("embed", "ssm_ch")),
+    (r"ssm'\]\['out_proj'\]$", ("ssm_inner", "embed")),
+    (r"ssm'\]\['conv_w'\]$", ("conv", "ssm_ch")),
+    (r"mtp'\]\['proj'\]\['w'\]$", ("embed2", "embed")),
+]
+
+# logical name -> mesh-axis priority list; special names:
+#   "fsdp"  resolves to the configured FSDP axes
+_DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "vocab": ("model",),
+    "kv_heads": ("model",),
+    "q_per_kv": ("model",),
+    "heads": ("model",),
+    "head": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "ssm_ch": ("model",),
+    "ssm_inner": ("model",),
+    "embed": ("fsdp",),
+    "embed2": (),
+    "frontend": (),
+    "lora": ("fsdp",),
+    "act": (),
+    "conv": (),
+}
+
+
+def logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    for pat, names in _PATTERNS:
+        if re.search(pat, path):
+            if len(names) == ndim:
+                return names
+            if len(names) == ndim - 1:       # stacked block leaf
+                return ("layers", *names)
+    return tuple([None] * ndim)              # norms, scalars: replicated
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, fsdp_axes: Sequence[str] = ("data",),
+                 overrides: Optional[Dict[str, Tuple[str, ...]]] = None,
+                 fsdp_min_size: int = 2 ** 16):
+        self.mesh = mesh
+        self.fsdp_axes = tuple(a for a in fsdp_axes
+                               if a in mesh.shape)
+        self.rules = dict(_DEFAULT_RULES)
+        if overrides:
+            self.rules.update(overrides)
+        self.fsdp_min_size = fsdp_min_size
+        self.axis_sizes = dict(mesh.shape)
+
+    def _resolve(self, logical: Optional[str]) -> Tuple:
+        """Returns candidate entries; each candidate is a tuple of mesh
+        axes (len > 1 => combined sharding of one dim, e.g. EP over
+        model×data)."""
+        if logical is None or logical == "layers":
+            return ()
+        axes = self.rules.get(logical, ())
+        out = []
+        for a in axes:
+            if a == "fsdp":
+                if self.fsdp_axes:
+                    out.append(tuple(self.fsdp_axes))
+            elif isinstance(a, tuple):
+                out.append(a)
+            else:
+                out.append((a,))
+        return tuple(out)
+
+    def spec_for(self, path: str, shape: Tuple[int, ...]) -> P:
+        names = logical_axes_for(path, len(shape))
+        if int(np.prod(shape)) < self.fsdp_min_size:
+            return P()                        # small leaves: replicate
+        used: set = set()
+        entries = []
+        for dim, logical in zip(shape, names):
+            chosen = None
+            for cand in self._resolve(logical):
+                if any(a in used or a not in self.axis_sizes
+                       for a in cand):
+                    continue
+                k = int(np.prod([self.axis_sizes[a] for a in cand]))
+                if dim % k == 0:
+                    chosen = cand if len(cand) > 1 else cand[0]
+                    used.update(cand)
+                    break
+            entries.append(chosen)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    # ------------------------------------------------------------------ #
+    def param_shardings(self, specs) -> Any:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(specs)
+        out = []
+        for path, leaf in flat:
+            p = self.spec_for(jax.tree_util.keystr(path), leaf.shape)
+            out.append(NamedSharding(self.mesh, p))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def batch_axes(self) -> Tuple[str, ...]:
+        axes = [a for a in ("pod", "data") if a in self.axis_sizes]
+        return tuple(axes)
+
+    def _batch_spec(self, nbatch: int, rest_ndim: int,
+                    seq_axis: Optional[int] = None,
+                    seq_size: int = 0, heads_axis: Optional[int] = None,
+                    heads_size: int = 0) -> P:
+        """Shard batch over (pod,data) if divisible; else fall back to
+        sequence-parallel / head-parallel over 'model'."""
+        baxes = self.batch_axes()
+        total = int(np.prod([self.axis_sizes[a] for a in baxes])) if baxes \
+            else 1
+        entries: list = [None] * (1 + rest_ndim)
+        if baxes and nbatch % total == 0:
+            entries[0] = baxes if len(baxes) > 1 else baxes[0]
+        elif "data" in self.axis_sizes and \
+                nbatch % self.axis_sizes["data"] == 0:
+            entries[0] = "data"
+        elif seq_axis is not None and "model" in self.axis_sizes and \
+                seq_size % self.axis_sizes["model"] == 0:
+            entries[seq_axis] = "model"
+            while entries and entries[-1] is None:
+                entries.pop()
+            return P(*entries)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def input_shardings(self, batch_specs) -> Any:
+        """Sharding for a batch dict (tokens/labels/frames/patches)."""
+        def conv(path, leaf):
+            return NamedSharding(
+                self.mesh, self._batch_spec(leaf.shape[0],
+                                            len(leaf.shape) - 1))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(batch_specs)
+        out = [conv(p, l) for p, l in flat]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def cache_shardings(self, cache_specs) -> Any:
+        """KV/latent/SSM caches: batch -> data axes; if batch can't fill
+        them, sequence (axis 1 of stacked [nb,B,T,...] leaves) -> model
+        (SP); SSM state heads -> model."""
+        def conv(path, leaf):
+            name = jax.tree_util.keystr(path)
+            shape = leaf.shape
+            # stacked block caches have a leading n_blocks dim
+            stacked = "blocks" in name
+            b_ax = 1 if stacked else 0
+            entries: list = [None] * len(shape)
+            baxes = self.batch_axes()
+            total = int(np.prod([self.axis_sizes[a] for a in baxes])) \
+                if baxes else 1
+            nbatch = shape[b_ax]
+            sharded_model = False
+            if baxes and nbatch % total == 0:
+                entries[b_ax] = baxes if len(baxes) > 1 else baxes[0]
+            elif "data" in self.axis_sizes and \
+                    nbatch % self.axis_sizes["data"] == 0:
+                entries[b_ax] = "data"
+            # model axis: heads for k/v, seq for latent, heads for state
+            m = self.axis_sizes.get("model", 1)
+            if ("'k'" in name or "'v'" in name) and len(shape) >= b_ax + 4:
+                kv = shape[b_ax + 2]
+                if kv % m == 0:
+                    entries[b_ax + 2] = "model"
+                    sharded_model = True
+                elif shape[b_ax + 1] % m == 0:
+                    entries[b_ax + 1] = "model"   # sequence-parallel cache
+                    sharded_model = True
+            elif "latent" in name and len(shape) >= b_ax + 3:
+                if shape[b_ax + 1] % m == 0:
+                    entries[b_ax + 1] = "model"
+                    sharded_model = True
+            elif "state" in name and len(shape) >= b_ax + 4:
+                if shape[b_ax + 1] % m == 0:
+                    entries[b_ax + 1] = "model"
+                    sharded_model = True
+            elif "conv" in name and len(shape) >= b_ax + 3:
+                if shape[b_ax + 2] % m == 0:
+                    entries[b_ax + 2] = "model"
+                    sharded_model = True
+            del sharded_model
+            while entries and entries[-1] is None:
+                entries.pop()
+            return NamedSharding(self.mesh, P(*entries))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs)
+        out = [conv(p, l) for p, l in flat]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())

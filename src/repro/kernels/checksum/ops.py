@@ -1,0 +1,34 @@
+"""Dispatch for the tensor integrity hash: Pallas on TPU, jnp ref
+elsewhere (identical results by construction — tests assert equality,
+not allclose: it's an integer hash)."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from .checksum import tensor_checksum_pallas
+from .ref import tensor_checksum as tensor_checksum_ref
+from .ref import tree_checksums as tree_checksums_ref
+
+
+def _want_pallas(use_pallas) -> bool:
+    if use_pallas is not None:
+        return use_pallas
+    if os.environ.get("REPRO_USE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def tensor_checksum(x, use_pallas=None):
+    if _want_pallas(use_pallas):
+        return tensor_checksum_pallas(
+            x, interpret=jax.default_backend() != "tpu")
+    return tensor_checksum_ref(x)
+
+
+def tree_checksums(tree, use_pallas=None):
+    import jax.numpy as jnp
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.stack([tensor_checksum(l, use_pallas) for l in leaves])

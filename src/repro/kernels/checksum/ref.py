@@ -1,0 +1,109 @@
+"""Pure-jnp oracle: lane-parallel polynomial integrity hash for tensors.
+
+TPU adaptation of the paper's CRC32 integrity primitive (DESIGN.md
+§2.3): CRC32 is byte-serial table lookup — hostile to a 8×128 vector
+unit — so on-device integrity uses a multiplicative polynomial hash over
+32-bit lanes:
+
+    h(x) = Σ_i  x_i · r^i   (mod 2^32),   r = 2654435761 (odd)
+
+Error-detection properties needed by the log/checkpoint layers hold:
+r is odd ⇒ r^i is odd ⇒ any change to a single lane (torn 8-byte unit,
+bit flip) changes h; multi-lane corruptions collide with probability
+~2^-32.  Like CRC32 it is NOT cryptographic.
+
+The hash is *blockwise combinable*: for blocks of length L,
+    h(x) = Σ_b  h(block_b) · r^(bL)
+which is what lets the Pallas kernel compute per-block partials in VMEM
+and combine them with one tiny reduction.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+R = np.uint32(2654435761)
+
+
+def _powers(n: int) -> np.ndarray:
+    """[r^0, r^1, ..., r^(n-1)] mod 2^32 (host-precomputed constant)."""
+    out = np.empty(n, np.uint32)
+    acc = np.uint32(1)
+    for i in range(n):
+        out[i] = acc
+        acc = np.uint32((int(acc) * int(R)) & 0xFFFFFFFF)
+    return out
+
+
+_POW_CACHE: dict = {}
+
+
+def powers(n: int) -> np.ndarray:
+    if n not in _POW_CACHE:
+        _POW_CACHE[n] = _powers(n)
+    return _POW_CACHE[n]
+
+
+def as_lanes(x: jax.Array) -> jax.Array:
+    """Bitcast any tensor to a flat uint32 lane vector (zero-padded)."""
+    raw = jax.lax.bitcast_convert_type(
+        x.reshape(-1), jnp.uint8) if x.dtype != jnp.uint8 else x.reshape(-1)
+    raw = raw.reshape(-1)
+    pad = (-raw.shape[0]) % 4
+    if pad:
+        raw = jnp.pad(raw, (0, pad))
+    return jax.lax.bitcast_convert_type(raw.reshape(-1, 4),
+                                        jnp.uint32).reshape(-1)
+
+
+def device_powers(n: int, base: Optional[int] = None) -> jax.Array:
+    """[b^0 .. b^(n-1)] mod 2^32 computed ON DEVICE (uint32 mul wraps).
+    Host-precomputed weights would embed an HLO constant as large as the
+    hashed tensor — fatal for hashing multi-GB parameter leaves."""
+    b = jnp.uint32(R if base is None else base)
+    return jnp.cumprod(
+        jnp.concatenate([jnp.ones((1,), jnp.uint32),
+                         jnp.full((n - 1,), b, jnp.uint32)]))
+
+
+_BLOCK = 4096
+_R_BLOCK = np.uint32(pow(int(R), _BLOCK, 1 << 32))   # r^BLOCK mod 2^32
+
+
+def checksum_lanes(lanes: jax.Array) -> jax.Array:
+    """h(lanes) -> uint32 scalar.
+
+    Blockwise evaluation (h = Σ_b h(block_b)·r^(bL)): the weight vector
+    is a 16 KiB constant reused across blocks, per-block partials are
+    one multiply-add pass (memory-bound), and only the nb block factors
+    need a device cumprod.  Identical value to the flat definition for
+    any block size — and to the Pallas kernel's partial/combine scheme.
+    """
+    n = lanes.shape[0]
+    if n <= _BLOCK:
+        return jnp.sum(lanes * jnp.asarray(powers(n)), dtype=jnp.uint32)
+    pad = (-n) % _BLOCK
+    if pad:
+        lanes = jnp.concatenate([lanes,
+                                 jnp.zeros((pad,), lanes.dtype)])
+    blocks = lanes.reshape(-1, _BLOCK)
+    w = jnp.asarray(powers(_BLOCK))
+    partials = jnp.sum(blocks * w[None, :], axis=1, dtype=jnp.uint32)
+    facs = device_powers(blocks.shape[0], base=int(_R_BLOCK))
+    return jnp.sum(partials * facs, dtype=jnp.uint32)
+
+
+def tensor_checksum(x: jax.Array) -> jax.Array:
+    """Integrity hash of one tensor (any shape/dtype) -> uint32 scalar."""
+    return checksum_lanes(as_lanes(x))
+
+
+def tree_checksums(tree) -> jax.Array:
+    """Stacked per-leaf checksums of a pytree -> uint32 [n_leaves]."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.stack([tensor_checksum(l) for l in leaves])

@@ -1,0 +1,30 @@
+"""Dispatch for flash attention: Pallas kernel on TPU (or forced via
+REPRO_USE_PALLAS=1, interpret-mode on CPU), jnp reference otherwise."""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_reference
+
+
+def _want_pallas(use_pallas) -> bool:
+    if use_pallas is not None:
+        return use_pallas
+    if os.environ.get("REPRO_USE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    scale=None, use_pallas=None):
+    if _want_pallas(use_pallas):
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, cap=cap, scale=scale,
+            interpret=jax.default_backend() != "tpu")
+    return attention_reference(q, k, v, causal=causal, window=window,
+                               cap=cap, scale=scale)

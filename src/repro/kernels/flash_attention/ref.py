@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for blocked flash attention.
+
+Materialized-scores attention with causal / sliding-window masks and
+logit softcap — the semantics the Pallas kernel must reproduce.
+q [B,H,S,D]; k,v [B,KV,S,D] with GQA group mapping h -> h // (H//KV).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        cap: Optional[float] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhtd->bhqt", q, kk,
+                   preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = jnp.tanh(s / cap) * cap
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqt,bhtd->bhqd", p, vv)

@@ -1,0 +1,37 @@
+"""Jit'd dispatch for the SSD scan: Pallas kernel on TPU, pure-jnp
+reference elsewhere (the dry-run lowers the reference so 512-host-device
+compilation works).  Set ``REPRO_USE_PALLAS=1`` (or pass use_pallas) to
+force the kernel (interpret-mode on CPU — used by the allclose tests)."""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssd_decode_reference, ssd_reference
+from .ssd_scan import ssd_pallas
+
+
+def _want_pallas(use_pallas) -> bool:
+    if use_pallas is not None:
+        return use_pallas
+    if os.environ.get("REPRO_USE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def ssd(xh, dt, A_log, Bm, Cm, chunk: int, use_pallas=None
+        ) -> Tuple[jax.Array, jax.Array]:
+    if _want_pallas(use_pallas):
+        interp = jax.default_backend() != "tpu"
+        return ssd_pallas(xh, dt, A_log, Bm, Cm, chunk, interpret=interp)
+    return ssd_reference(xh, dt, A_log, Bm, Cm, chunk)
+
+
+def ssd_decode(xh, dt, A_log, Bm, Cm, state) -> Tuple[jax.Array, jax.Array]:
+    # one-token recurrence is three tiny einsums — no kernel needed
+    return ssd_decode_reference(xh, dt, A_log, Bm, Cm, state)

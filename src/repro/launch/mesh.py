@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state — the dry-run must set XLA_FLAGS
+before any jax initialization.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods
+    × 256 chips as (pod=2, data=16, model=16); the pod axis carries
+    data-parallel gradient reduction and the journal-replication domain
+    (DCN), data/model are intra-pod ICI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_devices: Optional[int] = None):
+    """Tiny mesh over whatever devices exist (tests: 1 CPU device)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,99 @@
+"""§Perf hillclimbing driver: run named experiment variants of the
+three chosen cells and append results to artifacts/perf/.
+
+  PYTHONPATH=src python -m repro.launch.perf --exp qwen2_nofsdp
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+
+OUT = "artifacts/perf"
+
+# experiment registry: name -> run_cell kwargs
+EXPERIMENTS = {
+    # ---- cell A: qwen2-7b × train_4k (representative dense) ----------
+    "qwen2_base": dict(arch="qwen2-7b", shape_name="train_4k",
+                       multi_pod=False, variant="base"),
+    # A1: drop FSDP => pure TP(model) × DP(data); params replicated over
+    # data; hypothesis: kills per-layer contracting-dim all-reduces
+    "qwen2_nofsdp": dict(arch="qwen2-7b", shape_name="train_4k",
+                         multi_pod=False, fsdp_axes=(),
+                         variant="nofsdp"),
+    # A2: A1 + attention fully data-parallel (no head_dim sharding —
+    # kv=4 can't fill the 16-way model axis, and sharding the
+    # contracting head_dim forced fp32 score psums); optimizer state of
+    # the now-replicated attention weights is ZeRO-1 sharded over data
+    "qwen2_dp_attn": dict(
+        arch="qwen2-7b", shape_name="train_4k", multi_pod=False,
+        fsdp_axes=(), rule_overrides={"head": ()},
+        variant="dp_attn"),
+
+    # A3: A1 + explicit activation-sharding constraints on the residual
+    # stream (pin batch->data at embed + block boundaries)
+    "qwen2_nofsdp_act": dict(
+        arch="qwen2-7b", shape_name="train_4k", multi_pod=False,
+        fsdp_axes=(), act_constraint=True, variant="nofsdp_act"),
+
+    # ---- cell B: deepseek-v3-671b × train_4k (worst fraction) --------
+    "deepseek_base": dict(arch="deepseek-v3-671b", shape_name="train_4k",
+                          multi_pod=False, variant="base"),
+    # B1: full EP — experts sharded over model×data (1 expert/device),
+    # no contracting-dim sharding of expert weights
+    "deepseek_ep256": dict(
+        arch="deepseek-v3-671b", shape_name="train_4k", multi_pod=False,
+        rule_overrides={"expert": (("model", "data"),)},
+        fsdp_axes=(), variant="ep256"),
+    # B2: shard_map all-to-all EP dispatch (the DeepSeek deployment
+    # pattern): routing at pjit level, dispatch/compute/combine inside
+    # shard_map with two a2a hops over the 256-rank grid
+    "deepseek_ep_a2a": dict(
+        arch="deepseek-v3-671b", shape_name="train_4k", multi_pod=False,
+        fsdp_axes=(), moe_ep=True, variant="ep_a2a"),
+    # B3: B2 + FSDP kept for attention/dense weights
+    "deepseek_ep_a2a_fsdp": dict(
+        arch="deepseek-v3-671b", shape_name="train_4k", multi_pod=False,
+        moe_ep=True, variant="ep_a2a_fsdp"),
+
+    # ---- cell C: journaled step on the multi-pod mesh (the paper's
+    # replication+integrity primitives in HLO) -------------------------
+    "journal_off": dict(arch="qwen2-7b", shape_name="train_4k",
+                        multi_pod=True, fsdp_axes=(),
+                        variant="journal_off"),
+    "journal_on": dict(arch="qwen2-7b", shape_name="train_4k",
+                       multi_pod=True, fsdp_axes=(), journal=True,
+                       variant="journal_on"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", required=True,
+                    choices=sorted(EXPERIMENTS) + ["all"])
+    args = ap.parse_args()
+    names = sorted(EXPERIMENTS) if args.exp == "all" else [args.exp]
+    for name in names:
+        kw = EXPERIMENTS[name]
+        r = run_cell(out_dir=OUT, **kw)
+        cc = r.get("collective_bytes_per_device_corrected",
+                   r.get("collective_bytes_per_device", {}))
+        coll = sum(v for k, v in cc.items()
+                   if k not in ("count", "top"))
+        print(f"[perf] {name}: flops/dev="
+              f"{r.get('flops_per_device_corrected', 0):.3e} "
+              f"coll/dev={coll:.3e}B")
+        for t in r.get("collective_bytes_per_device", {}).get("top", []):
+            print(f"    full-graph top: {t}")
+        for t in r.get("block", {}).get(
+                "collective_bytes_per_device", {}).get("top", []):
+            print(f"    block top:      {t}")
+
+
+if __name__ == "__main__":
+    main()

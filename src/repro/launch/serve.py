@@ -1,0 +1,77 @@
+"""Serving launcher: batched prefill + decode loop with a KV/state cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config, reduced_config
+from repro.models import model as M
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b", choices=ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else \
+        get_config(args.arch)
+    if not cfg.causal:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
+    rng = np.random.default_rng(args.seed)
+    params = M.init_params(jax.random.key(args.seed), cfg)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+    cache = M.init_cache(cfg, B, max_len)
+
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)}
+    if cfg.input_kind == "tokens+patches":
+        npatch = min(cfg.n_patches, P - 1)
+        batch = {"patches": jnp.asarray(
+            rng.normal(size=(B, npatch, cfg.frontend_dim)), jnp.float32),
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, P - npatch)),
+                jnp.int32)}
+
+    prefill = jax.jit(lambda p, b, c: M.serve_step(p, cfg, b, c,
+                                                   jnp.int32(0)))
+    decode = jax.jit(lambda p, t, c, i: M.serve_step(
+        p, cfg, {"tokens": t}, c, i))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch, cache)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    for j in range(G - 1):
+        logits, cache = decode(params, tok, cache, jnp.int32(P + j))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out_tokens.append(tok)
+    tok.block_until_ready()
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"[serve] {cfg.name}: prefill {B}x{P} in {t_prefill*1e3:.1f}ms; "
+          f"decoded {G-1} steps in {t_decode*1e3:.1f}ms "
+          f"({B*(G-1)/max(t_decode,1e-9):.1f} tok/s)")
+    print(f"[serve] sample continuation: {np.asarray(gen[0])[:16]}")
+
+
+if __name__ == "__main__":
+    main()

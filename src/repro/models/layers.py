@@ -1,0 +1,655 @@
+"""Neural layers shared by all ten architectures (pure JAX / XLA ops).
+
+Everything here lowers to einsum/scan/scatter so the multi-pod dry-run
+can compile for 512 host devices; the Pallas kernels in
+``repro.kernels`` are drop-in accelerated equivalents validated against
+these (see kernels/*/ref.py).
+
+Attention comes in three execution strategies, chosen by shape:
+  * direct      — materialized scores (short sequences, decode).
+  * blockwise   — q-chunked lazy softmax against full K/V, each chunk
+                  checkpointed (long prefill; memory O(chunk·S); the
+                  Pallas flash kernel is the TPU-optimal equivalent).
+  * sliding     — banded gather per query chunk (local layers: O(S·w)
+                  compute instead of O(S²) — gemma2's local half).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------- #
+# numerics helpers
+# ---------------------------------------------------------------------- #
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float
+                ) -> Tuple[jax.Array, jax.Array]:
+    """positions [..., S] -> cos/sin tables [..., S, dim/2] (fp32)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, H, D]; cos/sin [..., S, D/2] broadcast over heads."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------- #
+# attention strategies
+# ---------------------------------------------------------------------- #
+NEG_INF = -2.0 ** 30
+
+
+def _mask_bias(qi: jax.Array, ki: jax.Array, causal: bool,
+               window: Optional[int], kv_len: Optional[jax.Array]
+               ) -> jax.Array:
+    """Additive fp32 bias [..., q, k] from absolute indices."""
+    ok = jnp.ones((qi.shape[-1], ki.shape[-1]), dtype=bool)
+    if causal:
+        ok &= ki[None, :] <= qi[:, None]
+    if window is not None:
+        ok &= ki[None, :] > qi[:, None] - window
+    if kv_len is not None:
+        ok &= ki[None, :] < kv_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _direct_attention(q, k, v, *, scale, causal, window, cap,
+                      q_offset, kv_len):
+    """q [B,Sq,K,G,D]; k,v [B,Sk,K,D] -> [B,Sq,K,G,D]."""
+    B, Sq = q.shape[0], q.shape[1]
+    Sk = k.shape[1]
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    qi = q_offset + jnp.arange(Sq)
+    ki = jnp.arange(Sk)
+    s = s + _mask_bias(qi, ki, causal, window, kv_len)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+
+
+def _blockwise_attention(q, k, v, *, scale, causal, window, cap,
+                         q_offset, chunk_q, unroll):
+    """q-chunked attention against full K/V (memory O(chunk_q × Sk)).
+
+    Each q-step is jax.checkpoint'ed so the backward pass recomputes its
+    score tile instead of saving S² probabilities.  The causal half-waste
+    (masked tiles still computed) is inherent to the XLA path; the Pallas
+    flash kernel skips fully-masked tiles on TPU.
+    """
+    B, Sq, K, G, D = q.shape
+    Dv = v.shape[-1]
+    nq = Sq // chunk_q
+    qc = jnp.moveaxis(q.reshape(B, nq, chunk_q, K, G, D), 1, 0)
+
+    def q_step(_, qi_blk):
+        qblk, qidx = qi_blk                       # [B,cq,K,G,D], scalar
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qblk, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cap)
+        qpos = q_offset + qidx * chunk_q + jnp.arange(chunk_q)
+        kpos = jnp.arange(k.shape[1])
+        s = s + _mask_bias(qpos, kpos, causal, window, None)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+        return None, out
+
+    body = jax.checkpoint(q_step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = lax.scan(body, None, (qc, jnp.arange(nq)),
+                       unroll=True if unroll else 1)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, K, G, Dv).astype(q.dtype)
+
+
+def _sliding_attention(q, k, v, *, scale, window, cap, chunk_q, unroll):
+    """Banded local attention: each query chunk sees only [start-w, end).
+    O(S·w) compute instead of O(S²) — gemma2's local layers."""
+    B, Sq, K, G, D = q.shape
+    Dv = v.shape[-1]
+    nq = Sq // chunk_q
+    band = window + chunk_q               # kv slab per query chunk
+    # left-pad K/V so every slab read is in bounds
+    kp = jnp.pad(k, ((0, 0), (band - chunk_q, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (band - chunk_q, 0), (0, 0), (0, 0)))
+    qc = jnp.moveaxis(q.reshape(B, nq, chunk_q, K, G, D), 1, 0)
+
+    def q_step(_, qi_blk):
+        qblk, qidx = qi_blk
+        start = qidx * chunk_q            # slab covers [start-w, start+cq)
+        kblk = lax.dynamic_slice_in_dim(kp, start, band, axis=1)
+        vblk = lax.dynamic_slice_in_dim(vp, start, band, axis=1)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cap)
+        qpos = start + jnp.arange(chunk_q)
+        kpos = start - window + jnp.arange(band)   # absolute (pre-pad) index
+        ok = (kpos[None, :] <= qpos[:, None]) & \
+             (kpos[None, :] > qpos[:, None] - window) & (kpos[None, :] >= 0)
+        s = s + jnp.where(ok, 0.0, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(vblk.dtype)
+        out = jnp.einsum("bkgqt,btkd->bqkgd", p, vblk)
+        return None, out
+
+    body = jax.checkpoint(q_step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = lax.scan(body, None, (qc, jnp.arange(nq)),
+                       unroll=True if unroll else 1)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, K, G, Dv).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, cap=None, q_offset=0,
+              kv_len=None, chunk_q=512, scale=None, unroll=False):
+    """Dispatch on shape: decode/short -> direct; long local -> sliding;
+    long global -> q-chunked lazy softmax."""
+    B, Sq, K, G, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    if Sq == 1 or (Sq * Sk) <= (2048 * 2048) or kv_len is not None:
+        return _direct_attention(q, k, v, scale=scale, causal=causal,
+                                 window=window, cap=cap, q_offset=q_offset,
+                                 kv_len=kv_len)
+    if window is not None and Sq % chunk_q == 0 and Sq > window:
+        return _sliding_attention(q, k, v, scale=scale, window=window,
+                                  cap=cap, chunk_q=chunk_q, unroll=unroll)
+    if Sq % chunk_q == 0:
+        return _blockwise_attention(q, k, v, scale=scale, causal=causal,
+                                    window=window, cap=cap,
+                                    q_offset=q_offset, chunk_q=chunk_q,
+                                    unroll=unroll)
+    return _direct_attention(q, k, v, scale=scale, causal=causal,
+                             window=window, cap=cap, q_offset=q_offset,
+                             kv_len=kv_len)
+
+
+# ---------------------------------------------------------------------- #
+# GQA attention layer (dense archs, jamba's attn layers)
+# ---------------------------------------------------------------------- #
+
+def gqa_params_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, \
+        cfg.resolved_head_dim
+    shapes = {
+        "wq": (D, KV, H // KV, hd),
+        "wk": (D, KV, hd),
+        "wv": (D, KV, hd),
+        "wo": (KV, H // KV, hd, D),
+    }
+    if cfg.qkv_bias:
+        shapes.update({"bq": (KV, H // KV, hd), "bk": (KV, hd),
+                       "bv": (KV, hd)})
+    return shapes
+
+
+def gqa_attention(x, p, cfg: ModelConfig, *, local: bool,
+                  cache: Optional[Dict[str, jax.Array]] = None,
+                  index: Optional[jax.Array] = None):
+    """x [B,S,D].  cache = {"k","v" [B,T,KV,hd]} for serving; ``index`` is
+    the global write position (0 at prefill).  Returns (y, new_cache)."""
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    pos0 = 0 if index is None else index
+    positions = (pos0 + jnp.arange(S))[None, :]
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+    q = apply_rope(q.reshape(B, S, -1, hd), cos, sin).reshape(q.shape)
+    k = apply_rope(k, cos, sin)
+    window = cfg.sliding_window if local else None
+    if cache is None:
+        o = attention(q, k, v, causal=cfg.causal, window=window,
+                      cap=cfg.attn_logit_softcap, unroll=cfg.scan_unroll)
+        new_cache = None
+    else:
+        ck = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), index, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), index, axis=1)
+        if S > 1:
+            # prefill (index==0 by construction): attend within the new
+            # span directly — blockwise kicks in for long S, and we skip
+            # the still-empty tail of the cache buffer.
+            o = attention(q, k, v, causal=cfg.causal, window=window,
+                          cap=cfg.attn_logit_softcap,
+                          unroll=cfg.scan_unroll)
+        else:
+            o = attention(q, ck, cv, causal=False, window=window,
+                          cap=cfg.attn_logit_softcap, q_offset=index,
+                          kv_len=index + S)
+        new_cache = {"k": ck, "v": cv}
+    y = jnp.einsum("bskgh,kghd->bsd", o, p["wo"])
+    return y, new_cache
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, hd), dt),
+    }
+
+
+# ---------------------------------------------------------------------- #
+# MLA attention (deepseek-v3): low-rank Q/KV with compressed cache
+# ---------------------------------------------------------------------- #
+
+def mla_params_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": (D, qr), "q_norm": (qr,),
+        "wq_b": (qr, H, dn + dr),
+        "wkv_a": (D, kr + dr), "kv_norm": (kr,),
+        "wkv_b": (kr, H, dn + dv),
+        "wo_mla": (H, dv, D),
+    }
+
+
+def mla_attention(x, p, cfg: ModelConfig, *,
+                  cache: Optional[Dict[str, jax.Array]] = None,
+                  index: Optional[jax.Array] = None):
+    """DeepSeek-V3 multi-head latent attention.  The serving cache stores
+    only the compressed latent (kv_lora + rope dims) per token."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    pos0 = 0 if index is None else index
+    positions = (pos0 + jnp.arange(S))[None, :]
+
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"],
+                  cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["wq_b"])      # e = dn+dr
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_tables(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    ckv_full = jnp.einsum("bsd,de->bse", x, p["wkv_a"])  # [B,S,kr+dr]
+    ckv, k_rope = ckv_full[..., :kr], ckv_full[..., kr:]
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    latent = jnp.concatenate(
+        [rms_norm(ckv, p["kv_norm"], cfg.norm_eps), k_rope], axis=-1)
+
+    new_cache = None
+    if cache is not None:
+        lat_buf = lax.dynamic_update_slice_in_dim(
+            cache["latent"], latent.astype(cache["latent"].dtype), index,
+            axis=1)
+        new_cache = {"latent": lat_buf}
+        lat = latent if S > 1 else lat_buf     # prefill: fresh span only
+        kv_len = None if S > 1 else index + S
+        q_offset = 0 if S > 1 else index
+        causal = cfg.causal if S > 1 else False
+    else:
+        lat, kv_len, q_offset, causal = latent, None, 0, cfg.causal
+
+    if cache is not None and S == 1 and cfg.mla_absorb:
+        # Absorbed decode: fold wkv_b into the query/output projections so
+        # attention runs directly in the compressed latent space — avoids
+        # re-materializing K/V for the whole 32k+ cache every step.
+        wkb = p["wkv_b"][..., :dn]                      # [kr,H,dn]
+        wvb = p["wkv_b"][..., dn:]                      # [kr,H,dv]
+        q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, wkb)
+        q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # [B,1,H,kr+dr]
+        o_lat = attention(
+            q_eff.reshape(B, S, 1, H, kr + dr),
+            lat[:, :, None, :],                          # KV=1, G=H
+            lat[:, :, None, :kr],
+            causal=False, q_offset=q_offset, kv_len=kv_len,
+            scale=1.0 / math.sqrt(dn + dr))
+        o = jnp.einsum("bshr,rhv->bshv", o_lat.reshape(B, S, H, kr), wvb)
+        y = jnp.einsum("bshv,hvd->bsd", o, p["wo_mla"])
+        return y, new_cache
+
+    ckv_t, krope_t = lat[..., :kr], lat[..., kr:]
+    kv = jnp.einsum("btr,rhe->bthe", ckv_t, p["wkv_b"])   # e = dn+dv
+    k_nope, vv = kv[..., :dn], kv[..., dn:]
+    # per-head keys [B,T,H,dn+dr]; treat heads as KV groups (G=1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope_t[:, :, None, :],
+                                  (*k_nope.shape[:3], dr))], axis=-1)
+    o = attention(q_full.reshape(B, S, H, 1, dn + dr),
+                  k_full, vv, causal=causal, q_offset=q_offset,
+                  kv_len=kv_len, scale=1.0 / math.sqrt(dn + dr),
+                  unroll=cfg.scan_unroll)
+    o = o.reshape(B, S, H, dv)
+    y = jnp.einsum("bshv,hvd->bsd", o, p["wo_mla"])
+    return y, new_cache
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    width = cfg.kv_lora_rank + cfg.qk_rope_dim
+    return {
+        "latent": jax.ShapeDtypeStruct((batch, max_len, width), dt),
+    }
+
+
+# ---------------------------------------------------------------------- #
+# FFN: dense (swiglu) + mixture of experts
+# ---------------------------------------------------------------------- #
+
+def mlp_params_shapes(cfg: ModelConfig, d_ff: int) -> Dict[str, Tuple]:
+    D = cfg.d_model
+    n_in = 2 if cfg.gated_mlp else 1
+    shapes = {"wi": (D, n_in, d_ff), "wo": (d_ff, D)}
+    if cfg.mlp_bias:
+        shapes.update({"bi": (n_in, d_ff), "bo": (D,)})
+    return shapes
+
+
+def _act(x, kind: str):
+    f = jax.nn.gelu if kind == "gelu" else jax.nn.silu
+    return f(x.astype(jnp.float32))
+
+
+def mlp(x, p, cfg: ModelConfig):
+    h = jnp.einsum("bsd,dcf->bscf", x, p["wi"])
+    if cfg.mlp_bias:
+        h = h + p["bi"]
+    if cfg.gated_mlp:
+        gate, up = h[..., 0, :], h[..., 1, :]
+        act = _act(gate, cfg.mlp_act).astype(x.dtype) * up
+    else:
+        act = _act(h[..., 0, :], cfg.mlp_act).astype(x.dtype)
+    y = jnp.einsum("bsf,fd->bsd", act, p["wo"])
+    if cfg.mlp_bias:
+        y = y + p["bo"]
+    return y
+
+
+def moe_params_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    shapes = {
+        "router": (D, E),
+        "experts": {"wi": (E, D, 2, F), "wo": (E, F, D)},
+    }
+    if cfg.n_shared_experts:
+        shapes["shared"] = mlp_params_shapes(
+            cfg, cfg.moe_d_ff * cfg.n_shared_experts)
+    return shapes
+
+
+# -- expert parallelism (shard_map all-to-all dispatch) ----------------- #
+# Set by the launcher: (mesh, axes) where experts are sharded over the
+# flattened ``axes`` (data-major order, matching lax.all_to_all).  The
+# pjit-native scatter formulation below is correct but GSPMD cannot
+# shard its scatter across an expert-sharded buffer (it replicates the
+# [T·K, D] gather — §Perf cell B measured 240 GB/dev fp32 all-reduces),
+# so real EP uses the explicit a2a path.
+_EP_STATE: Optional[Tuple[Any, Tuple[str, ...]]] = None
+
+
+def set_moe_ep(mesh, axes: Optional[Tuple[str, ...]]) -> None:
+    global _EP_STATE
+    _EP_STATE = (mesh, tuple(axes)) if axes else None
+
+
+def _moe_ep_applicable(x, cfg: ModelConfig) -> bool:
+    if _EP_STATE is None:
+        return False
+    mesh, axes = _EP_STATE
+    sizes = dict(mesh.shape)
+    if any(a not in sizes for a in axes):
+        return False
+    d0, m = sizes[axes[0]], sizes[axes[1]]
+    B, S, _ = x.shape
+    return (B % d0 == 0 and S % m == 0 and
+            cfg.n_experts % (d0 * m) == 0)
+
+
+def _moe_ffn_ep(x, p, cfg: ModelConfig):
+    """Expert-parallel MoE: routing at the pjit level; dispatch/compute/
+    combine inside shard_map with two all_to_alls over the flattened
+    (data, model) grid — each rank owns E/R experts and T/R tokens.
+    Returns (y, aux)."""
+    import math as _math
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh, axes = _EP_STATE
+    sizes = dict(mesh.shape)
+    Dz, Mz = sizes[axes[0]], sizes[axes[1]]
+    R = Dz * Mz
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    E_loc = E // R
+    T_loc = (B // Dz) * (S // Mz)
+    C = max(1, int(_math.ceil(T_loc * K / E * cfg.capacity_factor)))
+
+    # routing at the pjit level (router grads flow through pjit normally)
+    logits = jnp.einsum("bsd,de->bse", x, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, gidx = lax.top_k(probs, K)
+    gate = (gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+            ).astype(x.dtype)
+
+    # partition tokens over BOTH grid axes: [B, S, ...] -> [B, M, S/M, ...]
+    def grid(v):
+        return v.reshape(B, Mz, S // Mz, *v.shape[2:])
+    xg, gig, gag = grid(x), grid(gidx), grid(gate)
+    spec4 = P(axes[0], axes[1], None, None)
+    spec_wi = P((axes[0], axes[1]), None, None, None)
+    spec_wo = P((axes[0], axes[1]), None, None)
+
+    def body(xl, gil, gal, wi, wo):
+        xt = xl.reshape(-1, D)                       # [T_loc, D]
+        gi = gil.reshape(-1, K)
+        ga = gal.reshape(-1, K)
+        flat_e = gi.reshape(-1)
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        tok = order // K
+        starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+        pos = jnp.arange(T_loc * K) - starts[sorted_e]
+        dest = sorted_e // E_loc                     # target rank
+        slot = (sorted_e % E_loc) * C + jnp.where(pos < C, pos,
+                                                  E_loc * C)  # drop
+        send = jnp.zeros((R, E_loc * C, D), xt.dtype)
+        send = send.at[dest, slot].set(xt[tok], mode="drop")
+        recv = lax.all_to_all(send, axes, split_axis=0, concat_axis=0)
+        h = recv.reshape(R, E_loc, C, D).transpose(1, 0, 2, 3) \
+            .reshape(E_loc, R * C, D)
+        a = jnp.einsum("ecd,edgf->ecgf", h, wi)
+        act = jax.nn.silu(a[..., 0, :].astype(jnp.float32)
+                          ).astype(h.dtype) * a[..., 1, :]
+        o = jnp.einsum("ecf,efd->ecd", act, wo)
+        outb = o.reshape(E_loc, R, C, D).transpose(1, 0, 2, 3) \
+            .reshape(R, E_loc * C, D)
+        back = lax.all_to_all(outb, axes, split_axis=0, concat_axis=0)
+        flatb = back.reshape(R * E_loc * C, D)
+        idx = jnp.where(pos < C, dest * (E_loc * C) + slot,
+                        R * E_loc * C)
+        vals = flatb.at[idx].get(mode="fill", fill_value=0.0)
+        vals = vals * ga.reshape(-1)[order][:, None]
+        y = jnp.zeros((T_loc, D), xt.dtype).at[tok].add(vals)
+        return y.reshape(xl.shape)
+
+    y = shard_map(body, mesh=mesh,
+                  in_specs=(spec4, spec4, spec4, spec_wi, spec_wo),
+                  out_specs=spec4, check_rep=False)(
+        xg, gig, gag, p["experts"]["wi"], p["experts"]["wo"])
+    y = y.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        y = y + mlp(x, p["shared"], cfg)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros(E).at[gidx.reshape(-1)].add(1.0) / (B * S * K)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+    return y, aux
+
+
+def moe_ffn(x, p, cfg: ModelConfig):
+    """Sort-based dropped-token MoE (capacity factor ``cf``).
+
+    Dispatch uses argsort + scatter (data movement, ~0 FLOPs in HLO)
+    into per-expert capacity buckets, then batched expert einsums — so
+    compiled FLOPs ≈ active FLOPs × cf, not × n_experts (the dense
+    one-hot dispatch pathology).  With EP enabled (set_moe_ep) and a
+    compatible shape, dispatch runs as shard_map all-to-alls instead.
+    Returns (y, aux_loss).
+    """
+    if _moe_ep_applicable(x, cfg):
+        return _moe_ffn_ep(x, p, cfg)
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", xt, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, gidx = lax.top_k(probs, K)                  # [T,K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = gidx.reshape(-1)                          # [T*K]
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    tok = order // K
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos = jnp.arange(T * K) - starts[sorted_e]
+    C = max(1, int(math.ceil(T * K / E * cfg.capacity_factor)))
+    pos = jnp.where(pos < C, pos, C)                   # C => dropped
+
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[sorted_e, pos].set(xt[tok], mode="drop")
+    h = jnp.einsum("ecd,edgf->ecgf", buf, p["experts"]["wi"])
+    act = jax.nn.silu(h[..., 0, :].astype(jnp.float32)).astype(x.dtype) \
+        * h[..., 1, :]
+    out_buf = jnp.einsum("ecf,efd->ecd", act, p["experts"]["wo"])
+
+    contrib = out_buf.at[sorted_e, pos].get(mode="fill", fill_value=0.0)
+    contrib = contrib * gate.reshape(-1)[order][:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[tok].add(contrib)
+    y = y.reshape(B, S, D)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(x, p["shared"], cfg)
+
+    # switch-style load-balance auxiliary
+    me = probs.mean(axis=0)                                    # [E]
+    ce = jnp.zeros(E).at[flat_e].add(1.0) / (T * K)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+    return y, aux
+
+
+# ---------------------------------------------------------------------- #
+# Mamba2 (SSD) mixer
+# ---------------------------------------------------------------------- #
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state_dim
+
+
+def ssm_params_shapes(cfg: ModelConfig) -> Dict[str, Tuple]:
+    D = cfg.d_model
+    di, nh, hd, ds = ssm_dims(cfg)
+    G = cfg.ssm_n_groups
+    conv_ch = di + 2 * G * ds
+    return {
+        "in_proj": (D, 2 * di + 2 * G * ds + nh),   # z, x, B, C, dt
+        "conv_w": (cfg.ssm_conv_width, conv_ch),
+        "conv_b": (conv_ch,),
+        "A_log": (nh,),
+        "D_skip": (nh,),
+        "dt_bias": (nh,),
+        "out_norm": (di,),
+        "out_proj": (di, D),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d.  x [B,S,C]; w [W,C].  With ``state``
+    ([B,W-1,C]) runs incrementally and returns the new state."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        new_state = xp[:, -(W - 1):, :] if W > 1 else None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(W - 1):, :]
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype), \
+        new_state
+
+
+def ssm_mixer(x, p, cfg: ModelConfig,
+              cache: Optional[Dict[str, jax.Array]] = None):
+    """Mamba2 block mixer.  cache = {"conv" [B,W-1,C], "state" [B,H,P,N]}."""
+    B, S, D = x.shape
+    di, nh, hd, ds = ssm_dims(cfg)
+    G = cfg.ssm_n_groups
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xi, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * ds, 2 * di + 2 * G * ds], axis=-1)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"],
+        state=None if cache is None else cache["conv"])
+    xi, Bm, Cm = jnp.split(conv_out, [di, di + G * ds], axis=-1)
+    xh = xi.reshape(B, S, nh, hd)
+    Bm = Bm.reshape(B, S, G, ds)
+    Cm = Cm.reshape(B, S, G, ds)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    from ..kernels.ssd_scan import ops as ssd_ops
+    if cache is None or S > 1:
+        # training or prefill: chunked SSD; final state seeds decoding
+        y, final = ssd_ops.ssd(xh, dt, p["A_log"], Bm, Cm,
+                               chunk=min(cfg.ssm_chunk, S))
+        new_cache = None if cache is None else \
+            {"conv": new_conv, "state": final}
+    else:
+        y, new_state = ssd_ops.ssd_decode(xh, dt, p["A_log"], Bm, Cm,
+                                          cache["state"])
+        new_cache = {"conv": new_conv, "state": new_state}
+    y = y + xh * p["D_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, new_cache
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int):
+    di, nh, hd, ds = ssm_dims(cfg)
+    G = cfg.ssm_n_groups
+    conv_ch = di + 2 * G * ds
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_conv_width - 1, conv_ch), dt),
+        "state": jax.ShapeDtypeStruct((batch, nh, hd, ds), jnp.float32),
+    }

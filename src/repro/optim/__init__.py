@@ -1,0 +1,5 @@
+from .optimizer import (OptConfig, apply_updates, init_opt_state,
+                        opt_state_specs)
+
+__all__ = ["OptConfig", "apply_updates", "init_opt_state",
+           "opt_state_specs"]

@@ -1,0 +1,141 @@
+"""Optimizers: AdamW (small/medium models) and factored Adafactor
+(100B+ models — second moment factored to rows+cols, no momentum, so
+optimizer state is ~0 bytes/param instead of 8).
+
+Pure-pytree implementation (no optax dependency in this image): state
+trees mirror the param tree so the sharding rules apply unchanged.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    clip_rms: float = 1.0
+
+
+def schedule(step, cfg: OptConfig):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def opt_state_specs(param_specs, cfg: OptConfig):
+    """ShapeDtypeStruct tree of the optimizer state (dry-run safe)."""
+    def leaf(spec):
+        if cfg.name == "adamw":
+            s = jax.ShapeDtypeStruct(spec.shape, jnp.float32)
+            return {"m": s, "v": s}
+        if _factored(spec.shape):
+            return {
+                "vr": jax.ShapeDtypeStruct(spec.shape[:-1], jnp.float32),
+                "vc": jax.ShapeDtypeStruct(spec.shape[:-2] + spec.shape[-1:],
+                                           jnp.float32),
+            }
+        return {"v": jax.ShapeDtypeStruct(spec.shape, jnp.float32)}
+    return jax.tree_util.tree_map(leaf, param_specs)
+
+
+def init_opt_state(params, cfg: OptConfig):
+    specs = opt_state_specs(
+        jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params), cfg)
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  specs)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(params, grads, state, step, cfg: OptConfig
+                  ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    lr = schedule(step, cfg)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)) \
+        if cfg.clip_norm else 1.0
+
+    if cfg.name == "adamw":
+        t = step.astype(jnp.float32) + 1.0
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32) * scale
+            m = cfg.b1 * s["m"] + (1 - cfg.b1) * g
+            v = cfg.b2 * s["v"] + (1 - cfg.b2) * g * g
+            mh = m / (1 - cfg.b1 ** t)
+            vh = v / (1 - cfg.b2 ** t)
+            u = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), \
+                {"m": m, "v": v}
+
+        flat_p, tp = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_s = tp.flatten_up_to(state)
+        res = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = jax.tree_util.tree_unflatten(tp, [r[0] for r in res])
+        new_s = jax.tree_util.tree_unflatten(tp, [r[1] for r in res])
+        return new_p, new_s, {"lr": lr, "grad_norm": gnorm}
+
+    # adafactor
+    t = step.astype(jnp.float32) + 1.0
+    beta = 1.0 - t ** (-cfg.decay_rate)
+
+    def upd(p, g, s):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + 1e-30
+        if "vr" in s:
+            vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True)[..., None], 1e-30)
+                * vc[..., None, :])
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta * s["v"] + (1 - beta) * g2
+            denom = jnp.sqrt(v)
+            new_s = {"v": v}
+        u = g / jnp.maximum(denom, 1e-30)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_rms)
+        if p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+    flat_p, tp = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_s = tp.flatten_up_to(state)
+    res = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = jax.tree_util.tree_unflatten(tp, [r[0] for r in res])
+    new_s = jax.tree_util.tree_unflatten(tp, [r[1] for r in res])
+    return new_p, new_s, {"lr": lr, "grad_norm": gnorm}

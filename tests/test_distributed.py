@@ -1,0 +1,200 @@
+"""Distributed components that need >1 device run in a subprocess with
+forced host devices (XLA locks the device count at first init, and the
+rest of the suite must keep seeing 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, n_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr}\nstdout:{out.stdout}"
+    return out.stdout
+
+
+def test_pipeline_parallel_matches_sequential():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.pipeline import pipeline_forward
+        mesh = jax.make_mesh((4,), ("stage",))
+        rng = np.random.default_rng(0)
+        n_stages, n_micro, mb, d = 4, 8, 2, 16
+        Ws = jnp.asarray(rng.normal(size=(n_stages, d, d)) * 0.3,
+                         jnp.float32)
+        x = jnp.asarray(rng.normal(size=(n_micro, mb, d)), jnp.float32)
+
+        def stage_fn(w, h):
+            return jnp.tanh(h @ w)
+
+        y = pipeline_forward(stage_fn, Ws, x, mesh=mesh, axis="stage",
+                             n_micro=n_micro)
+        # sequential reference
+        ref = x
+        for s in range(n_stages):
+            ref = jnp.tanh(ref @ Ws[s])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        print("PIPELINE_OK")
+    """, n_devices=4)
+    assert "PIPELINE_OK" in out
+
+
+def test_compressed_psum_close_to_exact():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.compression import quantized_allreduce
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(8, 4096)), jnp.float32)
+        got = quantized_allreduce(x, mesh, "data")
+        exact = jnp.broadcast_to(x.reshape(8, -1).sum(0), x.shape) \\
+            if False else jnp.tile(x.sum(0), (8, 1))
+        # per-shard view: every shard receives the same reduced value
+        rel = np.abs(np.asarray(got) - np.asarray(exact)).max() / \\
+            np.abs(np.asarray(exact)).max()
+        assert rel < 0.02, rel         # int8 quantization error bound
+        print("COMPRESS_OK", rel)
+    """, n_devices=8)
+    assert "COMPRESS_OK" in out
+
+
+def test_sharding_rules_cover_all_archs():
+    """Every parameter of every full-size arch gets a valid sharding on
+    the production mesh and no large leaf is left replicated."""
+    out = run_sub("""
+        import numpy as np, jax
+        from jax.tree_util import tree_flatten_with_path, keystr
+        from repro.configs import ARCH_NAMES, get_config
+        from repro.distributed.sharding import ShardingRules
+        from repro.launch.mesh import make_production_mesh
+        from repro.models import model as M
+        mesh = make_production_mesh(multi_pod=False)
+        bad = []
+        for name in ARCH_NAMES:
+            cfg = get_config(name)
+            specs = M.param_specs(cfg)
+            sh = ShardingRules(mesh).param_shardings(specs)
+            for (p, s), (_, ns) in zip(tree_flatten_with_path(specs)[0],
+                                       tree_flatten_with_path(sh)[0]):
+                nbytes = int(np.prod(s.shape)) * s.dtype.itemsize
+                shards = np.prod([dict(mesh.shape)[a] for e in ns.spec
+                                  if e is not None
+                                  for a in (e if isinstance(e, tuple)
+                                            else (e,))]) if ns.spec else 1
+                per_dev = nbytes / shards
+                # big leaves must shard down to the mesh floor (or 256MB)
+                floor = max(nbytes / mesh.devices.size * 1.01, 256e6)
+                if per_dev > floor:
+                    bad.append((name, keystr(p), s.shape, str(ns.spec)))
+        assert not bad, bad
+        print("SHARDING_OK")
+    """, n_devices=256)
+    assert "SHARDING_OK" in out
+
+
+def test_moe_expert_parallel_matches_dense_path():
+    """shard_map all-to-all EP dispatch == pjit scatter dispatch, bit
+    for bit, when dropless; gradients flow through both all_to_alls."""
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import reduced_config
+        from repro.models import layers as L
+        cfg = reduced_config("moonshot-v1-16b-a3b")   # 8e top-3, cf=8
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(0)
+        B, S, D = 8, 16, cfg.d_model
+        x = jnp.asarray(rng.normal(size=(B, S, D)) * 0.3, jnp.float32)
+        p = {"router": jnp.asarray(rng.normal(size=(D, cfg.n_experts))
+                                   * 0.1, jnp.float32),
+             "experts": {
+                 "wi": jnp.asarray(rng.normal(
+                     size=(cfg.n_experts, D, 2, cfg.moe_d_ff)) * 0.05,
+                     jnp.float32),
+                 "wo": jnp.asarray(rng.normal(
+                     size=(cfg.n_experts, cfg.moe_d_ff, D)) * 0.05,
+                     jnp.float32)}}
+        y_ref, _ = jax.jit(lambda x, p: L.moe_ffn(x, p, cfg))(x, p)
+        L.set_moe_ep(mesh, ("data", "model"))
+        with mesh:
+            y_ep, _ = jax.jit(lambda x, p: L.moe_ffn(x, p, cfg))(x, p)
+            g = jax.jit(jax.grad(
+                lambda p, x: L.moe_ffn(x, p, cfg)[0].sum()))(p, x)
+        L.set_moe_ep(None, None)
+        np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref),
+                                   atol=1e-5)
+        gn = float(jnp.sqrt(sum(jnp.sum(v ** 2) for v in
+                                jax.tree_util.tree_leaves(g))))
+        assert np.isfinite(gn) and gn > 0
+        print("EP_OK")
+    """, n_devices=8)
+    assert "EP_OK" in out
+
+
+def test_elastic_restore_onto_different_mesh():
+    """State checkpointed from a (4,2) mesh restores onto a (2,4) mesh
+    (device_put with new shardings after chunk reassembly)."""
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import (CheckpointConfig, CheckpointManager,
+                                      ObjectStore, ReplicatedStore)
+        from repro.core import Log, LogConfig, PMEMDevice
+        mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+        state = {"w": jnp.arange(64 * 32, dtype=jnp.float32
+                                 ).reshape(64, 32)}
+        sh_a = NamedSharding(mesh_a, P("data", "model"))
+        state = {"w": jax.device_put(state["w"], sh_a)}
+        stores = [ObjectStore("s0")]
+        log = Log.create(PMEMDevice(1 << 20), LogConfig(capacity=1 << 18))
+        mgr = CheckpointManager(ReplicatedStore(stores, 1), log,
+                                CheckpointConfig(chunks_per_leaf=4))
+        mgr.save(1, state, sync=True)
+        # restore onto a different mesh layout
+        mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+        step, got, _ = mgr.restore(state)
+        sh_b = NamedSharding(mesh_b, P("model", "data"))
+        w_b = jax.device_put(jnp.asarray(got["w"]), sh_b)
+        np.testing.assert_array_equal(np.asarray(w_b),
+                                      np.asarray(state["w"]))
+        assert w_b.sharding.mesh.shape == {"data": 2, "model": 4}
+        print("ELASTIC_OK")
+    """, n_devices=8)
+    assert "ELASTIC_OK" in out
+
+
+def test_journaled_train_step_emits_integrity():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import reduced_config
+        from repro.optim import OptConfig
+        from repro.train.step import init_train_state, make_train_step
+        cfg = reduced_config("starcoder2-3b")
+        opt = OptConfig(lr=1e-3)
+        state = init_train_state(jax.random.key(0), cfg, opt)
+        step = jax.jit(make_train_step(cfg, opt, journal=True))
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, 512, (2, 32))),
+                 "labels": jnp.asarray(rng.integers(0, 512, (2, 32)))}
+        _, m = step(state, batch)
+        assert m["integrity"].dtype == jnp.uint32
+        assert m["integrity"].shape[0] > 10        # one hash per leaf
+        # deterministic: same batch+state -> same hashes
+        _, m2 = step(state, batch)
+        assert (np.asarray(m["integrity"]) ==
+                np.asarray(m2["integrity"])).all()
+        print("JOURNAL_OK")
+    """, n_devices=1)
+    assert "JOURNAL_OK" in out

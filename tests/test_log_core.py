@@ -1,0 +1,170 @@
+"""Unit tests for the core Arcadia log: write path, recovery scan,
+monotonicity, wrap handling, reclamation, force semantics."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.log import (Log, LogConfig, LogFullError, FLAG_VALID)
+from repro.core.pmem import PMEMDevice
+
+
+def make_log(capacity=1 << 16, mode="fast", **kw):
+    dev = PMEMDevice(capacity + 4096, mode=mode)
+    return Log.create(dev, LogConfig(capacity=capacity, **kw))
+
+
+def test_append_and_iterate_roundtrip():
+    log = make_log()
+    payloads = [bytes([i]) * (16 + 7 * i) for i in range(20)]
+    ids = [log.append(p) for p in payloads]
+    assert ids == list(range(1, 21))
+    got = list(log.iter_records())
+    assert [p for _, p in got] == payloads
+    assert [l for l, _ in got] == ids
+
+
+def test_fine_grained_interface():
+    log = make_log()
+    rid, ptr = log.reserve(16)
+    assert ptr is not None            # fast mode: direct PMEM pointer
+    ptr[:8] = b"abcdefgh"
+    log.copy(rid, b"12345678", at=8)  # mix direct + copy API
+    log.complete(rid)
+    log.force(rid)
+    assert log.durable_lsn == rid
+    (lsn, payload), = list(log.iter_records())
+    assert payload == b"abcdefgh12345678"
+    assert log.getLSN(rid) == lsn
+
+
+def test_recovery_finds_tail_without_tail_pointer():
+    dev = PMEMDevice(1 << 17, mode="fast")
+    log = Log.create(dev, LogConfig(capacity=1 << 16))
+    for i in range(50):
+        log.append(f"rec-{i}".encode())
+    re = Log.open(dev, LogConfig(capacity=1 << 16))
+    assert re.next_lsn == log.next_lsn
+    assert [p for _, p in re.iter_records()] == \
+        [f"rec-{i}".encode() for i in range(50)]
+    # appends continue with monotonic LSNs after recovery
+    nid = re.append(b"after")
+    assert nid == log.next_lsn
+
+
+def test_wraparound():
+    cap = 4096
+    dev = PMEMDevice(cap + 4096, mode="fast")
+    log = Log.create(dev, LogConfig(capacity=cap))
+    payload = b"x" * 100
+    ids = []
+    for i in range(200):
+        try:
+            ids.append(log.append(payload))
+        except LogFullError:
+            # reclaim everything durable and continue
+            for rid in ids:
+                log.cleanup(rid)
+            ids = []
+    # log still consistent after many wraps
+    re = Log.open(dev, LogConfig(capacity=cap))
+    assert [p for _, p in re.iter_records()] == [payload] * len(ids)
+
+
+def test_log_full_raises():
+    log = make_log(capacity=1024)
+    with pytest.raises(LogFullError):
+        for _ in range(100):
+            log.append(b"y" * 100)
+
+
+def test_cleanup_advances_head():
+    dev = PMEMDevice(1 << 17, mode="fast")
+    log = Log.create(dev, LogConfig(capacity=1 << 16))
+    ids = [log.append(b"z" * 64) for _ in range(10)]
+    for rid in ids[:5]:
+        log.cleanup(rid)
+    s = log.stats()
+    assert s["head_lsn"] == 6
+    re = Log.open(dev, LogConfig(capacity=1 << 16))
+    assert [l for l, _ in re.iter_records()] == ids[5:]
+
+
+def test_cleanup_out_of_order_keeps_later_records():
+    """Mid-log cleanup must not truncate recovery (tombstone flag)."""
+    dev = PMEMDevice(1 << 17, mode="fast")
+    log = Log.create(dev, LogConfig(capacity=1 << 16))
+    ids = [log.append(f"r{i}".encode()) for i in range(6)]
+    log.cleanup(ids[2])               # hole in the middle
+    re = Log.open(dev, LogConfig(capacity=1 << 16))
+    assert [l for l, _ in re.iter_records()] == [1, 2, 4, 5, 6]
+
+
+def test_cleanup_all():
+    dev = PMEMDevice(1 << 17, mode="fast")
+    log = Log.create(dev, LogConfig(capacity=1 << 16))
+    for i in range(10):
+        log.append(b"q" * 32)
+    log.cleanupAll()
+    assert list(log.iter_records()) == []
+    nid = log.append(b"fresh")
+    assert nid == 11                  # LSNs keep increasing
+    re = Log.open(dev, LogConfig(capacity=1 << 16))
+    assert [p for _, p in re.iter_records()] == [b"fresh"]
+
+
+def test_concurrent_writers_in_order_commit():
+    """copy/complete run from many threads; committed prefix has no holes
+    and LSNs are monotonic (the paper's core concurrency claim)."""
+    log = make_log(capacity=1 << 20, max_threads=8)
+    n_threads, per_thread = 8, 50
+    errors = []
+
+    def writer(t):
+        try:
+            for i in range(per_thread):
+                data = f"t{t}-i{i}".encode() * 4
+                rid, ptr = log.reserve(len(data))
+                ptr[:] = data
+                log.complete(rid)
+                log.force(rid, freq=4)
+        except Exception as e:       # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors
+    last = log.next_lsn - 1
+    log.force(last, freq=1)
+    assert log.durable_lsn == last == n_threads * per_thread
+    lsns = [l for l, _ in log.iter_records()]
+    assert lsns == sorted(lsns) == list(range(1, last + 1))
+
+
+def test_force_freq_skips_non_leaders():
+    log = make_log()
+    for i in range(1, 8):
+        rid = log.append(b"a" * 16, freq=8)
+        assert log.durable_lsn == 0          # no leader yet
+    rid = log.append(b"a" * 16, freq=8)      # lsn 8 -> leader
+    assert log.durable_lsn == 8
+
+
+def test_vulnerability_window_bound():
+    log = make_log(max_threads=4)
+    assert log.vulnerability_bound(8) == 32  # F x T
+
+
+def test_strict_mode_basic_roundtrip():
+    log = make_log(mode="strict")
+    rid, ptr = log.reserve(32)
+    assert ptr is None                 # strict mode: no direct pointer
+    log.copy(rid, b"s" * 32)
+    log.complete(rid)
+    log.force(rid)
+    assert [p for _, p in log.iter_records()] == [b"s" * 32]

@@ -1,0 +1,168 @@
+"""Direct unit tests for the §3 primitives (persistence, replication,
+integrity, atomicity) and the force policies — the building blocks the
+log composes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AtomicRegion, IntegrityRegion, LF_REP, Log,
+                        LogConfig, ORDERINGS, PARALLEL, PMEMDevice, REP_LF,
+                        make_policy, persist, write_and_force)
+from repro.core.replication import build_replica_set
+from repro.core.transport import QuorumError
+
+
+# ------------------------- persistence --------------------------------- #
+
+def test_persist_moves_volatile_units_to_durable():
+    dev = PMEMDevice(4096, mode="strict")
+    dev.write(100, b"hello world")
+    assert dev.dirty_units() > 0
+    survivor = dev.crash(np.random.default_rng(0), keep_probability=0.0)
+    assert survivor.read(100, 11) != b"hello world"   # lost: never forced
+    dev.write(100, b"hello world")
+    persist(dev, 100, 11)
+    assert dev.dirty_units() == 0
+    survivor = dev.crash(np.random.default_rng(0), keep_probability=0.0)
+    assert survivor.read(100, 11) == b"hello world"
+
+
+def test_persist_counts_flushes_and_fences():
+    dev = PMEMDevice(4096)
+    dev.write(0, b"x" * 256)
+    persist(dev, 0, 256)
+    assert dev.stats.flushes == 1 and dev.stats.fences == 1
+    assert dev.stats.lines_flushed == 4        # 256B = 4 cache lines
+
+
+# ------------------------- replication --------------------------------- #
+
+@pytest.mark.parametrize("ordering", ORDERINGS)
+def test_write_and_force_orderings_all_replicate(ordering):
+    rs = build_replica_set(mode="local+remote", capacity=1 << 16,
+                           n_backups=2, write_quorum=3)
+    dev = rs.primary_dev
+    off = rs.log.ring_off
+    dev.write(off, b"payload!" * 16)
+    vns = write_and_force(dev, off, 128, rs.group, ordering)
+    assert vns > 0
+    for s in rs.servers:
+        assert s.device.read(off, 128) == dev.read(off, 128)
+    rs.shutdown()
+
+
+def test_rep_lf_is_fastest_ordering():
+    """Fig. 6a: replicate-first keeps source lines in LLC for the NIC."""
+    times = {}
+    for ordering in ORDERINGS:
+        rs = build_replica_set(mode="local+remote", capacity=1 << 16,
+                               n_backups=1, write_quorum=2)
+        dev, off = rs.primary_dev, rs.log.ring_off
+        total = 0.0
+        for _ in range(50):
+            dev.write(off, b"z" * 1024)
+            total += write_and_force(dev, off, 1024, rs.group, ordering)
+        times[ordering] = total
+        rs.shutdown()
+    assert times[REP_LF] < times[LF_REP] <= times[PARALLEL]
+
+
+# -------------------------- integrity ---------------------------------- #
+
+def test_integrity_region_roundtrip_and_torn_write_detection():
+    dev = PMEMDevice(8192, mode="strict")
+    region = IntegrityRegion(dev, 0, capacity=256)
+    region.reliable_write(b"important data", tag=7)
+    data, tag = region.reliable_read()
+    assert data == b"important data" and tag == 7
+    # torn write: a fresh write crashes mid-flight
+    region.reliable_write(b"X" * 200, tag=9)
+    survivor = dev.crash(np.random.default_rng(1), keep_probability=0.5)
+    r2 = IntegrityRegion(survivor, 0, capacity=256)
+    data2, _ = r2.reliable_read()
+    # either fully new, or detected-corrupt (None) — never silent garbage
+    assert data2 in (b"X" * 200, None) or data2 == b"important data"
+
+
+def test_integrity_region_detects_bit_corruption():
+    dev = PMEMDevice(8192)
+    region = IntegrityRegion(dev, 0, capacity=128)
+    region.reliable_write(b"d" * 100)
+    dev.corrupt(IntegrityRegion.HEADER_SIZE + 10, 20,
+                np.random.default_rng(0))
+    data, _ = region.reliable_read()
+    assert data is None
+
+
+# -------------------------- atomicity ---------------------------------- #
+
+@settings(max_examples=30, deadline=None)
+@given(n_writes=st.integers(1, 6), seed=st.integers(0, 2 ** 31),
+       keep=st.floats(0.0, 1.0))
+def test_atomic_region_never_tears(n_writes, seed, keep):
+    dev = PMEMDevice(4096, mode="strict")
+    region = AtomicRegion(dev, 0, size=48)
+    values = [bytes([i]) * 48 for i in range(1, n_writes + 1)]
+    for v in values:
+        region.atomic_write(v)
+    survivor = dev.crash(np.random.default_rng(seed), keep_probability=keep)
+    r2 = AtomicRegion(survivor, 0, size=48)
+    got = r2.atomic_read()
+    # persistent-index variant: must be one of the written values
+    assert got in values or got is None and n_writes == 1 and keep < 1.0
+    # with >=2 completed writes, at least the previous value must survive
+    if n_writes >= 2:
+        assert got in values[-2:]
+
+
+def test_atomic_region_volatile_index_recovers_by_chooser():
+    dev = PMEMDevice(4096)
+    region = AtomicRegion(dev, 0, size=8, volatile_index=True)
+    region.atomic_write((5).to_bytes(8, "little"))
+    region.atomic_write((9).to_bytes(8, "little"))
+    r2 = AtomicRegion(dev, 0, size=8, volatile_index=True)
+    got = r2.recover(chooser=lambda d: int.from_bytes(d, "little"))
+    assert int.from_bytes(got, "little") == 9   # newest wins
+
+
+# ------------------------- force policies ------------------------------ #
+
+def make_log(max_threads=4):
+    dev = PMEMDevice(1 << 18)
+    return Log.create(dev, LogConfig(capacity=1 << 17,
+                                     max_threads=max_threads))
+
+
+@pytest.mark.parametrize("name,kw,bound", [
+    ("sync", {}, 0),
+    ("group", {"group_size": 4}, 4 + 4),
+    ("freq", {"freq": 4}, 16),
+])
+def test_policy_vulnerability_bounds(name, kw, bound):
+    log = make_log()
+    pol = make_policy(name, **kw)
+    for i in range(10):
+        rid, ptr = log.reserve(16)
+        ptr[:] = b"p" * 16
+        log.complete(rid)
+        pol.on_complete(log, rid)
+        assert log.vulnerability_window() <= max(bound, 0) + \
+            (0 if name != "group" else kw["group_size"])
+    pol.drain(log)
+    assert log.durable_lsn == 10
+
+
+def test_freq_policy_forces_only_on_multiples():
+    log = make_log()
+    pol = make_policy("freq", freq=4)
+    forced_at = []
+    for i in range(1, 13):
+        rid, ptr = log.reserve(8)
+        ptr[:] = b"q" * 8
+        log.complete(rid)
+        before = log.durable_lsn
+        pol.on_complete(log, rid)
+        if log.durable_lsn > before:
+            forced_at.append(rid)
+    assert forced_at == [4, 8, 12]

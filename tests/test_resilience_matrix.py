@@ -1,0 +1,152 @@
+"""Table 1 as executable tests: resilience of each log design to the four
+failure scenarios.  Arcadia must survive all four; each baseline must
+exhibit exactly the failure mode the paper attributes to it.
+
+              | device/node | partition | media error | power loss |
+   PMDK       |      ✗      |     ✗     |      ✗      |     ✓      |
+   FLEX       |      ✗      |     ✗     |      ✗      |     ✓      |
+   QueryFresh |      ✓      |     ✓     |      ✗      |     ✓      |
+   Arcadia    |      ✓      |     ✓     |      ✓      |     ✓      |
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CopyAccessor, Log, LogConfig, PMEMDevice,
+                        build_replica_set, device_size, quorum_recover)
+from repro.core.baselines import FlexLog, PMDKLog, QueryFreshLog
+from repro.core.transport import ReplicaServer, ReplicationGroup, Transport
+
+CAP = 1 << 16
+RECORDS = [f"payload-{i}".encode() * 3 for i in range(12)]
+
+
+# --------------------------- power loss -------------------------------- #
+
+def test_pmdk_survives_power_loss():
+    dev = PMEMDevice(CAP + 64, mode="strict")
+    log = PMDKLog(dev, CAP)
+    for r in RECORDS:
+        log.append(r)
+    survivor = dev.crash(np.random.default_rng(0), keep_probability=0.0)
+    relog = PMDKLog.open(survivor, CAP)
+    assert [p for _, p in relog.iter_records()] == RECORDS
+
+
+def test_arcadia_survives_power_loss():
+    dev = PMEMDevice(device_size(CAP), mode="strict")
+    log = Log.create(dev, LogConfig(capacity=CAP))
+    for r in RECORDS:
+        log.append(r)
+    survivor = dev.crash(np.random.default_rng(0), keep_probability=0.0)
+    relog = Log.open(survivor, LogConfig(capacity=CAP))
+    assert [p for _, p in relog.iter_records()] == RECORDS
+
+
+# --------------------------- media errors ------------------------------ #
+
+def _corrupt_payload(dev, off, n, seed=1):
+    dev.corrupt(off, n, np.random.default_rng(seed))
+
+
+def test_pmdk_silently_surfaces_corruption():
+    dev = PMEMDevice(CAP + 64)
+    log = PMDKLog(dev, CAP)
+    for r in RECORDS:
+        log.append(r)
+    _corrupt_payload(dev, PMDKLog.HEADER + 8 + 2, 8)   # inside record 1
+    got = [p for _, p in log.iter_records()]
+    assert got != RECORDS                 # ✗: corrupted data returned as-is
+    assert len(got) == len(RECORDS)       # ... and nobody noticed
+
+
+def test_query_fresh_silently_surfaces_corruption():
+    dev = PMEMDevice(CAP + 64)
+    log = QueryFreshLog(dev, CAP, group_size=4)
+    for r in RECORDS:
+        log.append(r)
+    log.flush()
+    _corrupt_payload(dev, QueryFreshLog.HEADER + 12 + 2, 8)
+    got = [p for _, p in log.iter_records()]
+    assert got != RECORDS and len(got) == len(RECORDS)   # ✗ silent
+
+
+def test_flex_detects_but_cannot_repair():
+    dev = PMEMDevice(CAP + 64)
+    log = FlexLog(dev, CAP)
+    for r in RECORDS:
+        log.append(r)
+    _corrupt_payload(dev, FlexLog.HEADER + 16 + 2, 8)   # record 1 payload
+    got = [p for _, p in log.iter_records()]
+    # detected (no silent corruption) but the tail of the log is LOST:
+    assert got == []                      # ✗: detection without redundancy
+
+
+def test_arcadia_detects_and_repairs_corruption():
+    rs = build_replica_set(mode="local+remote", capacity=CAP, n_backups=2,
+                           write_quorum=2)
+    for r in RECORDS:
+        rs.log.append(r)
+    rec = rs.log._recs[3]
+    _corrupt_payload(rs.primary_dev, rec.off + 24, rec.size)
+    # recovery picks an intact backup copy and repairs the primary
+    accs = [CopyAccessor.for_device(n, d)
+            for n, d in rs.server_devices().items()]
+    img, report = quorum_recover(accs, rs.cfg, write_quorum=2,
+                                 local_name=rs.primary_id)
+    assert report.chosen != rs.primary_id
+    relog = Log.open(img, LogConfig(capacity=CAP))
+    assert [p for _, p in relog.iter_records()] == RECORDS   # ✓ repaired
+
+
+# ----------------------- device / node failure ------------------------- #
+
+def test_unreplicated_logs_lose_everything_on_device_failure():
+    """PMDK/FLEX have a single copy by design: device gone = log gone."""
+    dev = PMEMDevice(CAP + 64)
+    log = FlexLog(dev, CAP)
+    for r in RECORDS:
+        log.append(r)
+    # the device fails: there is no second copy anywhere to recover from.
+    surviving_copies = []
+    assert surviving_copies == []          # ✗ by construction
+
+
+def test_arcadia_survives_device_failure():
+    rs = build_replica_set(mode="local+remote", capacity=CAP, n_backups=2,
+                           write_quorum=2)
+    for r in RECORDS:
+        rs.log.append(r)
+    # primary device destroyed; rebuild purely from backups
+    accs = [CopyAccessor.for_device(s.server_id, s.device)
+            for s in rs.servers]
+    img, _ = quorum_recover(accs, rs.cfg, write_quorum=2,
+                            local_name="node0-new")
+    relog = Log.open(img, LogConfig(capacity=CAP))
+    assert [p for _, p in relog.iter_records()] == RECORDS   # ✓
+
+
+def test_query_fresh_survives_device_failure():
+    dev = PMEMDevice(CAP + 64)
+    backup = ReplicaServer(PMEMDevice(CAP + 64), "qf-backup")
+    group = ReplicationGroup([Transport(backup, "qf-primary")],
+                             write_quorum=2, local_is_durable=True)
+    log = QueryFreshLog(dev, CAP, repl=group, group_size=4)
+    for r in RECORDS:
+        log.append(r)
+    log.flush()
+    relog = QueryFreshLog.open(backup.device, CAP)
+    got = [p for _, p in relog.iter_records()]
+    assert got == RECORDS                 # ✓ shipped copy survives
+
+
+# --------------------------- partition --------------------------------- #
+
+def test_arcadia_survives_partition_within_quorum():
+    rs = build_replica_set(mode="local+remote", capacity=CAP, n_backups=2,
+                           write_quorum=2)
+    rs.log.append(RECORDS[0])
+    rs.fail_backup("node2")               # partition one backup away
+    for r in RECORDS[1:]:
+        rs.log.append(r)                  # W=2 still met ✓
+    assert rs.log.durable_lsn == len(RECORDS)

@@ -1,0 +1,143 @@
+"""End-to-end trainer: loss goes down; crash/restart resumes exactly;
+straggler skips; journaled bounded loss."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (CheckpointConfig, CheckpointManager,
+                              ObjectStore, ReplicatedStore)
+from repro.core import Log, LogConfig, PMEMDevice
+from repro.configs import reduced_config
+from repro.data import DataConfig, SyntheticDataset
+from repro.optim import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+CAP = 1 << 18
+
+
+def build(arch="qwen2-7b", force_freq=1, total=12, ckpt_every=4,
+          stores=None, log=None, device_mode="fast", batch=4, seq=64):
+    cfg = reduced_config(arch)
+    dcfg = DataConfig(batch=batch, seq_len=seq)
+    data = SyntheticDataset(cfg, dcfg)
+    stores = stores or [ObjectStore(f"s{i}") for i in range(2)]
+    rstore = ReplicatedStore(stores, write_quorum=1)
+    if log is None:
+        dev = PMEMDevice(CAP + 4096, mode=device_mode)
+        log = Log.create(dev, LogConfig(capacity=CAP))
+    mgr = CheckpointManager(rstore, log,
+                            CheckpointConfig(force_freq=force_freq))
+    opt = OptConfig(name="adamw", lr=3e-3, warmup_steps=2,
+                    decay_steps=1000, clip_norm=1.0)
+    tr = Trainer(cfg, opt, data, mgr,
+                 TrainerConfig(total_steps=total, ckpt_every=ckpt_every,
+                               async_ckpt=False))
+    return tr, stores, log
+
+
+def test_loss_decreases():
+    tr, *_ = build(total=30, ckpt_every=100, batch=8)
+    tr.init_or_restore()
+    rep = tr.run()
+    first = np.mean(rep.losses[:4])
+    last = np.mean(rep.losses[-4:])
+    assert last < first - 1.0, (first, last)   # clear convergence signal
+
+
+def test_crash_restart_resumes_exactly():
+    """Uninterrupted run == run that crashes at step 8 and restarts."""
+    # reference: straight run of 12 steps
+    tr_ref, stores_ref, _ = build(total=12, ckpt_every=4)
+    tr_ref.init_or_restore()
+    rep_ref = tr_ref.run()
+
+    # crashing run: same seeds, die after 8 steps, restart, finish
+    tr1, stores, log = build(total=12, ckpt_every=4)
+    tr1.init_or_restore()
+    tr1.run(n_steps=8)                      # "crash" here (state discarded)
+    tr2, _, _ = build(total=12, ckpt_every=4, stores=stores, log=log)
+    restored = tr2.init_or_restore()
+    assert restored == 8                     # newest committed checkpoint
+    assert tr2.data.step >= 8                # journal re-seated the data
+    rep2 = tr2.run()
+    # the resumed tail must equal the reference tail exactly
+    np.testing.assert_allclose(rep2.losses, rep_ref.losses[8:], rtol=1e-5)
+
+
+def test_frequency_policy_bounds_journal_loss():
+    """With force freq F and a crash, at most F×T journal records of
+    progress are lost."""
+    F = 4
+    dev = PMEMDevice(CAP + 4096, mode="strict")
+    log = Log.create(dev, LogConfig(capacity=CAP, max_threads=1))
+    tr, stores, _ = build(total=10, ckpt_every=100, force_freq=F, log=log)
+    tr.init_or_restore()
+    tr.run(n_steps=10)
+    # crash WITHOUT drain: reopen from the durable image only
+    survivor = dev.crash(np.random.default_rng(0), keep_probability=0.0)
+    relog = Log.open(survivor, LogConfig(capacity=CAP))
+    from repro.checkpoint import CheckpointManager, CheckpointConfig, \
+        ReplicatedStore
+    mgr2 = CheckpointManager(ReplicatedStore(stores, 1), relog,
+                             CheckpointConfig(force_freq=F))
+    recs = [r["step"] for _, r in mgr2.journal_records()]
+    written = 10
+    durable = max(recs) + 1 if recs else 0
+    assert written - durable <= F * log.cfg.max_threads
+
+
+def test_straggler_skip_counted():
+    tr, *_ = build(total=12, ckpt_every=2)
+    tr.tcfg.async_ckpt = True
+    tr.init_or_restore()
+
+    class SlowFut:
+        def done(self):
+            return False
+    # simulate an in-flight save that never finishes
+    tr._pending_save = SlowFut()
+    tr.run(n_steps=6)
+    assert tr.report.ckpts_skipped >= 1
+
+
+def test_elastic_restore_across_chunk_counts():
+    """Checkpoint written with 1 chunk restores into a 4-chunk manager
+    (different writer-host count) and training continues."""
+    tr, stores, log = build(total=8, ckpt_every=4)
+    tr.init_or_restore()
+    tr.run()
+    cfg = reduced_config("qwen2-7b")
+    rstore = ReplicatedStore(stores, write_quorum=1)
+    mgr4 = CheckpointManager(rstore, log,
+                             CheckpointConfig(chunks_per_leaf=4))
+    data = SyntheticDataset(cfg, DataConfig(batch=2, seq_len=32))
+    opt = OptConfig(name="adamw", lr=1e-2, warmup_steps=2, decay_steps=100)
+    tr2 = Trainer(cfg, opt, data, mgr4,
+                  TrainerConfig(total_steps=10, ckpt_every=4,
+                                async_ckpt=False))
+    restored = tr2.init_or_restore()
+    assert restored == 8
+    rep = tr2.run()
+    assert rep.steps_run == 2
+
+
+def test_adafactor_variant_trains():
+    cfg = reduced_config("mamba2-130m")
+    data = SyntheticDataset(cfg, DataConfig(batch=2, seq_len=32))
+    stores = [ObjectStore("s0")]
+    dev = PMEMDevice(CAP + 4096)
+    log = Log.create(dev, LogConfig(capacity=CAP))
+    mgr = CheckpointManager(ReplicatedStore(stores, 1), log,
+                            CheckpointConfig())
+    opt = OptConfig(name="adafactor", lr=1e-2, warmup_steps=2,
+                    decay_steps=100)
+    tr = Trainer(cfg, opt, data, mgr,
+                 TrainerConfig(total_steps=10, ckpt_every=5,
+                               async_ckpt=False))
+    tr.init_or_restore()
+    rep = tr.run()
+    assert np.isfinite(rep.losses).all()
+    assert np.mean(rep.losses[-3:]) < np.mean(rep.losses[:3])
