@@ -1,0 +1,160 @@
+"""CI perf-trajectory tool: the fig5 append microbenchmark at a pinned
+small configuration, emitted as machine-readable BENCH_fig5.json.
+
+Pinned workload (the ISSUE-1 acceptance configuration):
+
+  * strict-mode device (the full volatile-overlay model — where the seed
+    paid interpreter prices per 8-byte unit),
+  * 64-byte records, sync force, N=2000 scalar appends,
+  * plus the batch axis (same total records at batch sizes 16/128).
+
+Two guarantees this file checks on every run:
+
+  1. Throughput trajectory: current records/s vs the seed measurement
+     (recorded below, measured on the pre-vectorization device+log).
+  2. Semantics: DeviceStats (writes, bytes, flushes, fences) for the
+     scalar workload must EQUAL the seed's counters — the speedup must
+     come from cheaper bookkeeping, not from skipping modelled hardware
+     work.
+
+Usage:  PYTHONPATH=src python -m benchmarks.ci_bench [out.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from repro.core import Log, LogConfig, PMEMDevice
+from repro.core.replication import device_size
+
+CAP = 1 << 22
+N = 2000
+SIZE = 64
+BATCH_SIZES = (16, 128)
+
+# Seed (pre-vectorization) measurements of this exact workload, taken at
+# commit ce188fc on the same container class.  records_per_s is the
+# trajectory anchor; stats are the semantic contract.
+SEED = {
+    "strict": {
+        "records_per_s": 7683.0,
+        "vns_per_record": 261.56,
+        "stats": {"writes": 6002, "bytes_written": 224052, "flushes": 2001,
+                  "lines_flushed": 4501, "fences": 2001},
+    },
+    "fast": {
+        "records_per_s": 25540.0,
+        "vns_per_record": 201.56,
+        "stats": {"writes": 4002, "bytes_written": 96052, "flushes": 2001,
+                  "lines_flushed": 2501, "fences": 2001},
+    },
+}
+
+STAT_KEYS = ("writes", "bytes_written", "flushes", "lines_flushed", "fences")
+
+
+def scalar_run(mode: str) -> dict:
+    dev = PMEMDevice(device_size(CAP), mode=mode)
+    log = Log.create(dev, LogConfig(capacity=CAP))
+    payload = b"x" * SIZE
+    vns = 0.0
+    t0 = time.perf_counter()
+    for _ in range(N):
+        _, v = log.append_timed(payload)
+        vns += v
+    dt = time.perf_counter() - t0
+    return dict(
+        mode=mode, n=N, size=SIZE, batch_size=1,
+        records_per_s=N / dt,
+        wall_us_per_record=dt / N * 1e6,
+        vns_per_record=vns / N,
+        stats={k: getattr(dev.stats, k) for k in STAT_KEYS},
+    )
+
+
+def batch_run(mode: str, bs: int) -> dict:
+    dev = PMEMDevice(device_size(CAP), mode=mode)
+    log = Log.create(dev, LogConfig(capacity=CAP))
+    payloads = [b"x" * SIZE] * bs
+    n_batches = N // bs
+    vns = 0.0
+    t0 = time.perf_counter()
+    for _ in range(n_batches):
+        _, v = log.append_batch_timed(payloads)
+        vns += v
+    dt = time.perf_counter() - t0
+    recs = n_batches * bs
+    return dict(
+        mode=mode, n=recs, size=SIZE, batch_size=bs,
+        records_per_s=recs / dt,
+        wall_us_per_record=dt / recs * 1e6,
+        vns_per_record=vns / recs,
+        stats={k: getattr(dev.stats, k) for k in STAT_KEYS},
+    )
+
+
+def _warm() -> None:
+    """One small throwaway run per mode: first-call costs (numpy init,
+    allocator warmup) must not land in the pinned measurements."""
+    for mode in ("strict", "fast"):
+        dev = PMEMDevice(device_size(CAP), mode=mode)
+        log = Log.create(dev, LogConfig(capacity=CAP))
+        for _ in range(32):
+            log.append_timed(b"w" * SIZE)
+        log.append_batch_timed([b"w" * SIZE] * 32)
+
+
+def main(out_path: str = "BENCH_fig5.json") -> int:
+    _warm()
+    current = {}
+    for mode in ("strict", "fast"):
+        current[f"scalar/{mode}"] = scalar_run(mode)
+        for bs in BATCH_SIZES:
+            current[f"batch{bs}/{mode}"] = batch_run(mode, bs)
+
+    problems = []
+    for mode in ("strict", "fast"):
+        cur, seed = current[f"scalar/{mode}"], SEED[mode]
+        for k in STAT_KEYS:
+            if cur["stats"][k] != seed["stats"][k]:
+                problems.append(
+                    f"{mode}: DeviceStats.{k} drifted "
+                    f"(seed {seed['stats'][k]} != now {cur['stats'][k]})")
+    strict_x = (current["scalar/strict"]["records_per_s"]
+                / SEED["strict"]["records_per_s"])
+    batch_x = (current[f"batch{BATCH_SIZES[-1]}/strict"]["records_per_s"]
+               / SEED["strict"]["records_per_s"])
+
+    doc = dict(
+        meta=dict(
+            workload=dict(capacity=CAP, n_records=N, record_bytes=SIZE,
+                          force="sync", batch_sizes=list(BATCH_SIZES)),
+            seed=SEED,
+            speedup_vs_seed=dict(
+                strict_scalar=round(strict_x, 2),
+                strict_batch=round(batch_x, 2),
+            ),
+            stats_identical_to_seed=not problems,
+        ),
+        rows=current,
+    )
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    for name, r in sorted(current.items()):
+        print(f"{name}: {r['records_per_s']:.0f} rec/s "
+              f"({r['wall_us_per_record']:.2f} us/rec, "
+              f"vns/rec={r['vns_per_record']:.0f})")
+    print(f"strict scalar speedup vs seed: {strict_x:.2f}x")
+    print(f"strict batch{BATCH_SIZES[-1]} speedup vs seed: {batch_x:.2f}x")
+    for p in problems:
+        print("STATS DRIFT:", p)
+    print(f"wrote {out_path}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:]))

@@ -7,13 +7,30 @@ figure-specific metric (ops/s, modelled ns, flush counts, ...).
 
 from __future__ import annotations
 
+import json
 import threading
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+# machine-readable sink: figure modules record rows here and dump them
+# with write_json() so perf trajectories diff across PRs (BENCH_*.json)
+_JSON_ROWS: Dict[str, dict] = {}
+
+
+def emit_json(name: str, **fields) -> None:
+    _JSON_ROWS[name] = fields
+
+
+def write_json(path: str, meta: dict | None = None) -> None:
+    doc = {"meta": meta or {}, "rows": _JSON_ROWS}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def wall_us(fn: Callable[[], None], n: int, warmup: int = 16) -> float:

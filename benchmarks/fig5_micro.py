@@ -5,9 +5,16 @@
     behind (a): PMDK persists the tail pointer every append, FLEX
     persists header/payload/tail separately, Arcadia persists once
     (no tail in the superline).
+(e) batch-size axis: Arcadia's append_batch pipeline (one alloc-lock
+    acquisition, one packed segment write, one coalesced flush per
+    batch) vs the baselines' looped per-record appends — both wall
+    clock and flushes/record.
 (c) throughput vs thread count (Arcadia freq-8 vs coarse-locked
     baselines)
 (d) multi-tenant aggregate throughput (N tenants, separate logs)
+
+Run as a script to also emit machine-readable BENCH_fig5.json
+(see benchmarks/ci_bench.py for the pinned CI configuration).
 """
 
 from __future__ import annotations
@@ -19,17 +26,18 @@ from repro.core.baselines import FlexLog, PMDKLog
 from repro.core.force_policy import FreqPolicy
 from repro.core.replication import device_size
 
-from .common import emit, threaded_ops_per_s, wall_us
+from .common import emit, emit_json, threaded_ops_per_s, wall_us, write_json
 
 SIZES = (64, 256, 1024, 4096)
+BATCH_SIZES = (1, 8, 64, 256)
 CAP = 1 << 24
 
 
-def _fresh(kind: str):
+def _fresh(kind: str, mode: str = "fast"):
     if kind == "arcadia":
-        dev = PMEMDevice(device_size(CAP))
+        dev = PMEMDevice(device_size(CAP), mode=mode)
         return Log.create(dev, LogConfig(capacity=CAP)), dev
-    dev = PMEMDevice(CAP + 64)
+    dev = PMEMDevice(CAP + 64, mode=mode)
     return (PMDKLog if kind == "pmdk" else FlexLog)(dev, CAP), dev
 
 
@@ -51,6 +59,8 @@ def latency(quick: bool = False):
             us = wall_us(op, n)
             emit(f"fig5a/latency/{kind}/{size}B", us,
                  f"model_ns={np.mean(vns_acc):.0f}")
+            emit_json(f"fig5a/latency/{kind}/{size}B", wall_us=us,
+                      model_ns=float(np.mean(vns_acc)))
 
 
 def breakdown(quick: bool = False):
@@ -60,13 +70,41 @@ def breakdown(quick: bool = False):
         log, dev = _fresh(kind)
         f0 = dev.stats.flushes
         for _ in range(n):
-            if kind == "arcadia":
-                log.append(payload)
-            else:
-                log.append(payload)
+            log.append(payload)
         flushes = (dev.stats.flushes - f0) / n
         emit(f"fig5b/flushes_per_append/{kind}", 0.0,
              f"flushes={flushes:.2f}")
+        emit_json(f"fig5b/flushes_per_append/{kind}", flushes=flushes)
+
+
+def batch_axis(quick: bool = False, mode: str = "strict", size: int = 64):
+    """The batch-size axis: records/s and flushes/record vs batch size.
+
+    Strict mode on purpose: this is where per-record bookkeeping used to
+    pay interpreter prices, so it is the axis the vectorized device +
+    batched pipeline is accountable to (see ISSUE/acceptance)."""
+    total = 512 if quick else 4096
+    payload = b"b" * size
+    for bs in BATCH_SIZES:
+        n_batches = max(1, total // bs)
+        for kind in ("arcadia", "pmdk", "flex"):
+            log, dev = _fresh(kind, mode=mode)
+            f0 = dev.stats.flushes
+            batch = [payload] * bs
+
+            def op():
+                log.append_batch(batch)   # baselines: per-record loop shim
+            us = wall_us(op, n_batches, warmup=2)
+            flushes = (dev.stats.flushes - f0)
+            recs = bs * (n_batches + 2)      # wall_us runs 2 warmup batches
+            rec_s = 1e6 / us * bs
+            emit(f"fig5e/batch/{mode}/{kind}/{size}B/bs{bs}", us / bs,
+                 f"recs_s={rec_s:.0f};flushes_per_rec="
+                 f"{flushes / max(recs, 1):.3f}")
+            emit_json(f"fig5e/batch/{mode}/{kind}/{size}B/bs{bs}",
+                      batch_size=bs, records_per_s=rec_s,
+                      wall_us_per_record=us / bs,
+                      flushes_per_record=flushes / max(recs, 1))
 
 
 def thread_throughput(quick: bool = False):
@@ -87,6 +125,7 @@ def thread_throughput(quick: bool = False):
         pol.drain(log)
         emit(f"fig5c/threads/arcadia/{n_threads}", 1e6 / tput,
              f"ops_s={tput:.0f}")
+        emit_json(f"fig5c/threads/arcadia/{n_threads}", ops_s=tput)
         for kind in ("pmdk", "flex"):
             blog, _ = _fresh(kind)
 
@@ -95,6 +134,7 @@ def thread_throughput(quick: bool = False):
             tput = threaded_ops_per_s(base_op, n_threads, ops)
             emit(f"fig5c/threads/{kind}/{n_threads}", 1e6 / tput,
                  f"ops_s={tput:.0f}")
+            emit_json(f"fig5c/threads/{kind}/{n_threads}", ops_s=tput)
 
 
 def multi_tenant(quick: bool = False):
@@ -114,14 +154,17 @@ def multi_tenant(quick: bool = False):
             tput = threaded_ops_per_s(op, tenants, ops)
             emit(f"fig5d/multitenant/{kind}/{size}B", 1e6 / tput,
                  f"agg_ops_s={tput:.0f}")
+            emit_json(f"fig5d/multitenant/{kind}/{size}B", agg_ops_s=tput)
 
 
 def run(quick: bool = False):
     latency(quick)
     breakdown(quick)
+    batch_axis(quick)
     thread_throughput(quick)
     multi_tenant(quick)
 
 
 if __name__ == "__main__":
     run()
+    write_json("BENCH_fig5.json", meta=dict(source="benchmarks/fig5_micro.py"))

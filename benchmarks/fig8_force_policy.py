@@ -5,7 +5,9 @@
     LSNs reserve() already hands out (no added shared state);
 (b) proxy for the L1d story: shared-counter acquisitions per op;
 (c/d) vulnerability-window distribution for freq-8/freq-16 — skewed far
-    below the F×T theoretical bound.
+    below the F×T theoretical bound;
+(e) batch axis: policies driven through on_complete_batch — one policy
+    decision (and at most one force) per batch instead of per record.
 """
 
 from __future__ import annotations
@@ -17,7 +19,7 @@ import numpy as np
 from repro.core import Log, LogConfig, PMEMDevice, make_policy
 from repro.core.replication import device_size
 
-from .common import emit, threaded_ops_per_s
+from .common import emit, emit_json, threaded_ops_per_s
 
 CAP = 1 << 24
 PAYLOAD = b"f" * 256
@@ -57,6 +59,31 @@ def throughput(quick: bool = False):
                  1e6 / tput, f"ops_s={tput:.0f}")
 
 
+def batch_throughput(quick: bool = False):
+    """Policy × batch-size axis: the batched write path hands each policy
+    one on_complete_batch per batch."""
+    total = 512 if quick else 4096
+    for bs in (8, 64, 256):
+        n_batches = max(1, total // bs)
+        for name, kw in POLICIES:
+            log = _log()
+            pol = make_policy(name, **kw)
+            sizes = [len(PAYLOAD)] * bs
+
+            def op(_t):
+                batch = log.reserve_batch(sizes)
+                for i in range(bs):
+                    batch.view(i)[:] = PAYLOAD
+                log.complete_batch(batch)
+                pol.on_complete_batch(log, batch.lsns)
+            tput = threaded_ops_per_s(op, 4, n_batches) * bs
+            pol.drain(log)
+            emit(f"fig8e/batch_policy/{_pname(name, kw)}/bs{bs}",
+                 1e6 / tput, f"recs_s={tput:.0f}")
+            emit_json(f"fig8e/batch_policy/{_pname(name, kw)}/bs{bs}",
+                      batch_size=bs, records_per_s=tput)
+
+
 def window_distribution(quick: bool = False):
     ops = 300 if quick else 2000
     for freq in (8, 16):
@@ -86,6 +113,7 @@ def window_distribution(quick: bool = False):
 
 def run(quick: bool = False):
     throughput(quick)
+    batch_throughput(quick)
     window_distribution(quick)
 
 

@@ -15,6 +15,8 @@ def main() -> None:
                     help="paper-scale sizes (slower)")
     ap.add_argument("--only", default=None,
                     help="comma-separated figure list, e.g. fig5,fig8")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump machine-readable rows (BENCH_*.json)")
     args = ap.parse_args()
     quick = not args.full
 
@@ -41,6 +43,9 @@ def main() -> None:
             failures += 1
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc()
+    if args.json:
+        from .common import write_json
+        write_json(args.json, meta=dict(quick=quick, source="benchmarks/run.py"))
     if failures:
         sys.exit(1)
 

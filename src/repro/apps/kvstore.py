@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import struct
 import threading
-from typing import Dict, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from ..core.force_policy import ForcePolicy, SyncPolicy
 from ..core.log import Log
@@ -53,6 +53,23 @@ class DurableKV:
             self._table[key] = val
         return rid
 
+    def put_many(self, items: Iterable[Tuple[bytes, bytes]]) -> List[int]:
+        """Batched WAL path: one reserve_batch / complete_batch round and
+        one policy decision for the whole write set (a RocksDB WriteBatch
+        analogue)."""
+        items = list(items)
+        if not items:
+            return []
+        payloads = [encode_put(k, v) for k, v in items]
+        batch = self.log.reserve_batch([len(p) for p in payloads])
+        self.log.copy_batch(batch, payloads)
+        self.log.complete_batch(batch)
+        self.policy.on_complete_batch(self.log, batch.lsns)
+        with self._lock:
+            for k, v in items:
+                self._table[k] = v
+        return batch.lsns
+
     def get(self, key: bytes) -> Optional[bytes]:
         with self._lock:
             return self._table.get(key)
@@ -88,6 +105,16 @@ class BaselineKV:
         with self._lock:
             self._table[key] = val
         return rid
+
+    def put_many(self, items: Iterable[Tuple[bytes, bytes]]) -> List[int]:
+        """Baseline batch path: per-record appends under the hood."""
+        items = list(items)
+        lsns, _vns = self.blog.append_batch(
+            [encode_put(k, v) for k, v in items])
+        with self._lock:
+            for k, v in items:
+                self._table[k] = v
+        return lsns
 
     def get(self, key: bytes) -> Optional[bytes]:
         with self._lock:

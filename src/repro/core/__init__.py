@@ -16,8 +16,8 @@ Public surface:
 from .pmem import CACHE_LINE, ATOM, CostModel, DeviceStats, PMEMDevice
 from .primitives import (AtomicRegion, IntegrityRegion, LF_REP, ORDERINGS,
                          PARALLEL, REP_LF, persist, write_and_force)
-from .log import (CorruptLogError, Log, LogConfig, LogError, LogFullError,
-                  Superline)
+from .log import (Batch, CorruptLogError, Log, LogConfig, LogError,
+                  LogFullError, Superline)
 from .force_policy import (ForcePolicy, FreqPolicy, GroupCommitPolicy,
                            SyncPolicy, make_policy)
 from .transport import (QuorumError, ReplicaServer, ReplicationGroup,
@@ -31,8 +31,8 @@ __all__ = [
     "CACHE_LINE", "ATOM", "CostModel", "DeviceStats", "PMEMDevice",
     "AtomicRegion", "IntegrityRegion", "LF_REP", "ORDERINGS", "PARALLEL",
     "REP_LF", "persist", "write_and_force",
-    "CorruptLogError", "Log", "LogConfig", "LogError", "LogFullError",
-    "Superline",
+    "Batch", "CorruptLogError", "Log", "LogConfig", "LogError",
+    "LogFullError", "Superline",
     "ForcePolicy", "FreqPolicy", "GroupCommitPolicy", "SyncPolicy",
     "make_policy",
     "QuorumError", "ReplicaServer", "ReplicationGroup", "Transport",

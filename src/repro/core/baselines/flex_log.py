@@ -16,9 +16,10 @@ from __future__ import annotations
 import struct
 import threading
 import zlib
-from typing import Iterator, Tuple
+from typing import Iterator, List, Tuple
 
 from ..pmem import PMEMDevice
+from .common import append_batch_looped
 
 _HDR = struct.Struct("<QQ")          # tail, count
 _REC = struct.Struct("<QII")         # lsn, size, crc
@@ -56,6 +57,9 @@ class FlexLog:
             vns += self.dev.write(0, _HDR.pack(self._tail, self._count))
             vns += self.dev.persist(0, _HDR.size)
             return lsn, vns
+
+    def append_batch(self, payloads: List[bytes]) -> Tuple[List[int], float]:
+        return append_batch_looped(self, payloads)
 
     def iter_records(self) -> Iterator[Tuple[int, bytes]]:
         tail, count = _HDR.unpack(self.dev.read(0, _HDR.size))

@@ -18,6 +18,7 @@ import threading
 from typing import Iterator, List, Tuple
 
 from ..pmem import PMEMDevice
+from .common import append_batch_looped
 
 _HDR = struct.Struct("<QQ")      # write_offset (tail), n_records
 
@@ -49,6 +50,9 @@ class PMDKLog:
             vns += self.dev.write(0, _HDR.pack(self._tail, self._count))
             vns += self.dev.persist(0, _HDR.size)        # flush tail ptr
             return self._count, vns
+
+    def append_batch(self, payloads: List[bytes]) -> Tuple[List[int], float]:
+        return append_batch_looped(self, payloads)
 
     def iter_records(self) -> Iterator[Tuple[int, bytes]]:
         tail, count = _HDR.unpack(self.dev.read(0, _HDR.size))

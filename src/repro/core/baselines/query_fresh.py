@@ -19,6 +19,7 @@ import threading
 from typing import Iterator, List, Optional, Tuple
 
 from ..pmem import PMEMDevice
+from .common import append_batch_looped
 from ..transport import ReplicationGroup
 
 _HDR = struct.Struct("<QQ")      # tail, count
@@ -60,6 +61,9 @@ class QueryFreshLog:
                 self._window = 0
                 vns += self._ship_locked()
             return lsn, vns
+
+    def append_batch(self, payloads: List[bytes]) -> Tuple[List[int], float]:
+        return append_batch_looped(self, payloads)
 
     def flush(self) -> float:
         with self._lock:

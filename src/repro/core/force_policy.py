@@ -14,14 +14,16 @@
                    completed records (worst case, Fig. 4).
 
 All policies expose ``on_complete(log, rec_id)`` called after
-``log.complete(rec_id)`` and ``drain(log)`` to force everything at the
-end of a run.
+``log.complete(rec_id)``, ``on_complete_batch(log, lsns)`` called after
+``log.complete_batch(batch)`` (one policy decision — and at most one
+force — for the whole batch), and ``drain(log)`` to force everything at
+the end of a run.
 """
 
 from __future__ import annotations
 
 import threading
-from typing import Optional
+from typing import List, Optional
 
 from .log import Log
 
@@ -31,6 +33,12 @@ class ForcePolicy:
 
     def on_complete(self, log: Log, rec_id: int) -> None:
         raise NotImplementedError
+
+    def on_complete_batch(self, log: Log, lsns: List[int]) -> None:
+        """Batch hook: default mirrors the scalar decisions one by one;
+        policies override to collapse them into a single force."""
+        for lsn in lsns:
+            self.on_complete(log, lsn)
 
     def drain(self, log: Log) -> None:
         last = log.next_lsn - 1
@@ -46,6 +54,12 @@ class SyncPolicy(ForcePolicy):
 
     def on_complete(self, log: Log, rec_id: int) -> None:
         log.force(rec_id, freq=1)
+
+    def on_complete_batch(self, log: Log, lsns: List[int]) -> None:
+        # forcing the last LSN covers the whole batch in one coalesced
+        # persist+replicate round (in-order commit has no holes)
+        if lsns:
+            log.force(lsns[-1], freq=1)
 
     def vulnerability_bound(self, log: Log) -> Optional[int]:
         return 0
@@ -75,6 +89,21 @@ class GroupCommitPolicy(ForcePolicy):
         if lead:
             log.force(rec_id, freq=1)
 
+    def on_complete_batch(self, log: Log, lsns: List[int]) -> None:
+        if not lsns:
+            return
+        lead = False
+        with self._lock:                 # one acquisition per batch
+            self._count += len(lsns)
+            if self._count >= self.group_size:
+                # keep the overshoot: a batch may cross the window
+                # mid-way, and the remainder counts toward the next
+                # force exactly as scalar on_complete calls would
+                self._count %= self.group_size
+                lead = True
+        if lead:
+            log.force(lsns[-1], freq=1)
+
     def vulnerability_bound(self, log: Log) -> Optional[int]:
         # window size + records racing in while the leader forces
         return self.group_size + log.cfg.max_threads
@@ -91,6 +120,13 @@ class FreqPolicy(ForcePolicy):
 
     def on_complete(self, log: Log, rec_id: int) -> None:
         log.force(rec_id, freq=self.freq)
+
+    def on_complete_batch(self, log: Log, lsns: List[int]) -> None:
+        # the largest leader LSN in the batch covers every force the
+        # scalar loop would have issued (in-order commit)
+        leaders = [l for l in lsns if l % self.freq == 0]
+        if leaders:
+            log.force(leaders[-1], freq=self.freq)
 
     def vulnerability_bound(self, log: Log) -> Optional[int]:
         return self.freq * log.cfg.max_threads   # F × T (§4.4)

@@ -58,6 +58,7 @@ REC_HDR_SIZE = _REC_HDR.size          # 24
 FLAG_VALID = 1 << 0
 FLAG_PAD = 1 << 1
 FLAG_CLEANED = 1 << 2
+FLAG_PHASH = 1 << 3   # integrity field is the lane-polynomial hash, not CRC32
 
 _SUPER = struct.Struct("<IIQQQQQ")    # magic, version, epoch, head_lsn,
 SUPER_MAGIC = 0xA3CAD1A0              # start_lsn, head_off, capacity
@@ -119,6 +120,29 @@ def _rec_crc(lsn: int, size: int, payload) -> int:
     return crc32(payload, crc32(struct.pack("<QI", lsn, size)))
 
 
+def _rec_phash(lsn: int, size: int, payload) -> int:
+    """Lane-polynomial integrity hash for large payloads (FLAG_PHASH).
+
+    CRC32 is byte-serial; for multi-MB records the batch pipeline routes
+    integrity through the blockwise-combinable polynomial hash instead,
+    which the Pallas kernel in kernels/checksum evaluates at VMEM
+    bandwidth on TPU (the jnp oracle elsewhere — identical value by
+    construction).  Seeded with (lsn, size) for the same soundness
+    reason as _rec_crc.
+    """
+    import numpy as np
+    from ..kernels.checksum.ops import tensor_checksum
+    buf = np.concatenate([
+        np.frombuffer(struct.pack("<QI", lsn, size), dtype=np.uint8),
+        np.frombuffer(payload, dtype=np.uint8),
+    ])
+    return int(tensor_checksum(buf))
+
+
+def _rec_checksum(lsn: int, size: int, payload, phash: bool) -> int:
+    return (_rec_phash if phash else _rec_crc)(lsn, size, payload)
+
+
 # record states (volatile tracking)
 RESERVED, COMPLETED, FORCED = 0, 1, 2
 
@@ -152,6 +176,46 @@ class LogConfig:
     ordering: str = REP_LF
     local_durable: bool = True       # False => remote-only mode
     max_threads: int = 64            # T in the F x T bound
+    # payloads >= this many bytes are integrity-hashed with the blockwise
+    # polynomial hash (Pallas kernel on TPU) instead of CRC32; None = never
+    phash_threshold: Optional[int] = 1 << 20
+
+
+@dataclass
+class _BatchSeg:
+    """One contiguous ring extent of a batch, staged in DRAM.
+
+    The whole segment (headers + payloads + pad headers) hits the device
+    as a single ``write`` at complete time — one bookkeeping operation
+    for N records instead of 3N.
+    """
+
+    ring_off: int
+    buf: bytearray
+
+
+@dataclass
+class Batch:
+    """A reserve_batch() reservation: N records allocated under one lock.
+
+    ``lsns`` lists the payload records only (pads are internal).  Payload
+    bytes are assembled in the staged segment buffers via ``view()`` or
+    ``Log.copy_batch``; ``Log.complete_batch`` checksums everything in
+    one sweep and publishes the segments.
+    """
+
+    lsns: List[int]
+    sizes: List[int]
+    _items: List[Tuple["_Rec", int, int]] = field(repr=False, default_factory=list)
+    _segs: List[_BatchSeg] = field(repr=False, default_factory=list)
+    _pad_lsns: List[int] = field(repr=False, default_factory=list)
+    _completed: bool = False
+
+    def view(self, i: int) -> memoryview:
+        """Writable staging pointer for payload ``i`` (the batch analogue
+        of the direct PMEM pointer reserve() returns)."""
+        rec, seg_idx, pay_off = self._items[i]
+        return memoryview(self._segs[seg_idx].buf)[pay_off : pay_off + rec.size]
 
 
 class Log:
@@ -292,15 +356,21 @@ class Log:
             raise ValueError("copy out of record bounds")
         return self.dev.write(rec.off + REC_HDR_SIZE + at, data)
 
+    def _use_phash(self, size: int) -> bool:
+        t = self.cfg.phash_threshold
+        return t is not None and size >= t
+
     def complete(self, rec_id: int) -> float:
         """Concurrent: checksum the payload and publish the valid header."""
         rec = self._recs[rec_id]
         view = self.dev.view(rec.off + REC_HDR_SIZE, rec.size)
         payload = view if view is not None else self.dev.read(
             rec.off + REC_HDR_SIZE, rec.size)
-        crc = _rec_crc(rec.lsn, rec.size, payload)
+        phash = self._use_phash(rec.size)
+        crc = _rec_checksum(rec.lsn, rec.size, payload, phash)
+        flags = FLAG_VALID | (FLAG_PHASH if phash else 0)
         vns = self.dev.write(
-            rec.off, _REC_HDR.pack(rec.lsn, rec.size, crc, FLAG_VALID))
+            rec.off, _REC_HDR.pack(rec.lsn, rec.size, crc, flags))
         vns += self.dev.cost.crc_byte_ns * rec.size
         self._mark_complete(rec_id)
         return vns
@@ -313,6 +383,25 @@ class Log:
                 if nxt is None or nxt.state < COMPLETED:
                     break
                 self._complete_upto += 1
+            self._commit_cv.notify_all()
+
+    def _mark_complete_many(self, lsns: List[int]) -> None:
+        """One _commit_cv pass for a whole batch (vs one per record)."""
+        if not lsns:
+            return
+        with self._commit_cv:
+            recs = self._recs
+            for lsn in lsns:
+                rec = recs[lsn]
+                if rec.state < COMPLETED:
+                    rec.state = COMPLETED
+            upto = self._complete_upto
+            while True:
+                nxt = recs.get(upto + 1)
+                if nxt is None or nxt.state < COMPLETED:
+                    break
+                upto += 1
+            self._complete_upto = upto
             self._commit_cv.notify_all()
 
     # -- force ----------------------------------------------------------- #
@@ -413,6 +502,171 @@ class Log:
             vns += self.force_vns_total - v0
         return rec_id, vns
 
+    # ------------------------------------------------------------------ #
+    # batched write path (DESIGN.md §3)
+    # ------------------------------------------------------------------ #
+    def reserve_batch(self, sizes: List[int]) -> Batch:
+        """Serialized: allocate space + LSNs for N records under ONE
+        _alloc_lock acquisition.
+
+        Allocation is planned against a shadow of the tail state first and
+        only committed if every record fits, so a LogFullError leaves no
+        partially-reserved state behind.  Ring wrap emits a PAD record (or
+        the implicit header-doesn't-fit skip) exactly like the scalar
+        path.  Headers are staged in DRAM segment buffers and reach the
+        device in complete_batch — the provisional flags=0 header the
+        scalar path publishes is unobservable here because reserve and
+        complete happen inside one call, with no force in between.
+        """
+        for size in sizes:
+            if size < 0 or _align8(REC_HDR_SIZE + size) > self.cfg.capacity:
+                raise ValueError("bad record size")
+        batch = Batch(lsns=[], sizes=list(sizes))
+        if not sizes:
+            return batch
+        with self._alloc_lock:
+            # plan (pure): mirror _fit over a shadow tail
+            tail, used = self._tail_off, self._used
+            plan: List[Tuple[str, int, int, int]] = []  # kind, off, size, extent
+            for size in sizes:
+                extent = _align8(REC_HDR_SIZE + size)
+                room = self.cfg.capacity - tail
+                off, pad_room = (tail, None) if extent <= room else (0, room)
+                need = extent + (pad_room or 0)
+                if used + need > self.cfg.capacity:
+                    raise LogFullError(
+                        f"log full: used={used} need={need} "
+                        f"cap={self.cfg.capacity}")
+                if pad_room is not None and pad_room >= REC_HDR_SIZE:
+                    plan.append(("pad", tail, pad_room - REC_HDR_SIZE,
+                                 pad_room))
+                elif pad_room is not None and pad_room > 0:
+                    plan.append(("skip", tail, 0, pad_room))
+                plan.append(("rec", off, size, extent))
+                tail = off + extent
+                used += need
+            # commit: lay records out over contiguous segments (a "skip"
+            # or a wrap breaks continuity), then build _Recs + buffers
+            seg_starts: List[int] = []
+            seg_lens: List[int] = []
+            placed: List[Tuple[str, int, int, int, int, int]] = []
+            prev_end = -1
+            for kind, off, size, extent in plan:
+                if kind == "skip":
+                    prev_end = -1       # stale bytes stay untouched
+                    continue
+                if off != prev_end:
+                    seg_starts.append(off)
+                    seg_lens.append(0)
+                si = len(seg_starts) - 1
+                placed.append((kind, off, size, extent, si, seg_lens[si]))
+                seg_lens[si] += extent
+                prev_end = off + extent
+            batch._segs = [_BatchSeg(s, bytearray(l))
+                           for s, l in zip(seg_starts, seg_lens)]
+            lsn = self._next_lsn
+            recs, abs_base = self._recs, self.ring_off
+            for kind, off, size, extent, si, hdr_off in placed:
+                if kind == "pad":
+                    buf = batch._segs[si].buf
+                    buf[hdr_off : hdr_off + REC_HDR_SIZE] = _REC_HDR.pack(
+                        lsn, size, 0, FLAG_VALID | FLAG_PAD)
+                    recs[lsn] = _Rec(lsn, abs_base + off, size, extent,
+                                     pad=True)
+                    batch._pad_lsns.append(lsn)
+                else:
+                    rec = _Rec(lsn, abs_base + off, size, extent)
+                    recs[lsn] = rec
+                    batch.lsns.append(lsn)
+                    batch._items.append((rec, si, hdr_off + REC_HDR_SIZE))
+                lsn += 1
+            self._next_lsn = lsn
+            self._tail_off = tail
+            self._used = used
+        return batch
+
+    def copy_batch(self, batch: Batch, payloads: List[bytes]) -> float:
+        """Concurrent: stage all payload bytes (ntstore cost model)."""
+        if len(payloads) != len(batch.lsns):
+            raise ValueError(
+                f"batch holds {len(batch.lsns)} records, got "
+                f"{len(payloads)} payloads")
+        total = 0
+        for i, data in enumerate(payloads):
+            rec, seg_idx, pay_off = batch._items[i]
+            if len(data) > rec.size:
+                raise ValueError("copy out of record bounds")
+            buf = batch._segs[seg_idx].buf
+            buf[pay_off : pay_off + len(data)] = data
+            total += len(data)
+        return self.dev.cost.store_byte_ns * total
+
+    def complete_batch(self, batch: Batch) -> float:
+        """Concurrent: checksum every payload in one sweep, pack all
+        headers, publish each staged segment with ONE device write, and
+        advance the complete watermark with ONE _commit_cv pass."""
+        if batch._completed:
+            raise LogError("batch already completed")
+        batch._completed = True
+        vns = 0.0
+        crc_bytes = 0
+        views = [memoryview(seg.buf) for seg in batch._segs]
+        pack, threshold = _REC_HDR.pack, self.cfg.phash_threshold
+        for rec, seg_idx, pay_off in batch._items:
+            mv = views[seg_idx]
+            size = rec.size
+            payload = mv[pay_off : pay_off + size]
+            phash = threshold is not None and size >= threshold
+            crc = _rec_checksum(rec.lsn, size, payload, phash)
+            flags = FLAG_VALID | (FLAG_PHASH if phash else 0)
+            mv[pay_off - REC_HDR_SIZE : pay_off] = pack(
+                rec.lsn, size, crc, flags)
+            crc_bytes += size
+        for seg in batch._segs:
+            vns += self.dev.write(self._abs(seg.ring_off), seg.buf)
+        vns += self.dev.cost.crc_byte_ns * crc_bytes
+        self._mark_complete_many(batch._pad_lsns + batch.lsns)
+        return vns
+
+    def force_batch(self, batch: Batch, freq: int = 1,
+                    timeout: Optional[float] = None) -> int:
+        """Force the batch per the frequency policy: the largest batch LSN
+        that is ≡ 0 (mod freq) leads for everything up to itself (exactly
+        the forces the scalar loop would have issued).  The force itself
+        hands _persist_range one coalesced byte range — one flush+fence
+        (two across a wrap) for the whole batch."""
+        if not batch.lsns:
+            with self._commit_cv:
+                return self._durable_lsn
+        if freq <= 1:
+            return self.force(batch.lsns[-1], freq=1, timeout=timeout)
+        leaders = [l for l in batch.lsns if l % freq == 0]
+        if not leaders:
+            with self._commit_cv:
+                return self._durable_lsn
+        return self.force(leaders[-1], freq=freq, timeout=timeout)
+
+    def append_batch(self, payloads: List[bytes], freq: int = 1) -> List[int]:
+        """Batched reserve+copy+complete+force: the Table-2 pipeline with
+        per-batch instead of per-record bookkeeping."""
+        batch = self.reserve_batch([len(p) for p in payloads])
+        self.copy_batch(batch, payloads)
+        self.complete_batch(batch)
+        self.force_batch(batch, freq=freq)
+        return batch.lsns
+
+    def append_batch_timed(self, payloads: List[bytes], freq: int = 1
+                           ) -> Tuple[List[int], float]:
+        """append_batch + modelled hardware ns (benchmark instrumentation)."""
+        v0 = self.force_vns_total
+        batch = self.reserve_batch([len(p) for p in payloads])
+        vns = self.copy_batch(batch, payloads)
+        vns += self.complete_batch(batch)
+        self.force_batch(batch, freq=freq)
+        with self._commit_cv:
+            vns += self.force_vns_total - v0
+        return batch.lsns, vns
+
     # observability ------------------------------------------------------ #
     @property
     def durable_lsn(self) -> int:
@@ -505,7 +759,8 @@ class Log:
             return None  # reserved but never completed => end of log
         if flags & FLAG_VALID and not (flags & (FLAG_PAD | FLAG_CLEANED)):
             payload = self.dev.read(self._abs(ring_off) + REC_HDR_SIZE, size)
-            if _rec_crc(lsn, size, payload) != crc:
+            if _rec_checksum(lsn, size, payload,
+                             bool(flags & FLAG_PHASH)) != crc:
                 return None
         rec = _Rec(lsn, self._abs(ring_off), size,
                    _align8(REC_HDR_SIZE + size), state=FORCED,
@@ -559,7 +814,8 @@ class Log:
             if not (flags & FLAG_VALID) or (flags & FLAG_CLEANED):
                 continue
             payload = self.dev.read(rec.off + REC_HDR_SIZE, size)
-            if _rec_crc(lsn, size, payload) != crc:
+            if _rec_checksum(lsn, size, payload,
+                             bool(flags & FLAG_PHASH)) != crc:
                 raise CorruptLogError(
                     f"record {lsn}: payload CRC mismatch after recovery")
             yield lsn, payload

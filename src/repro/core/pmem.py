@@ -21,6 +21,21 @@ PMEM (Optane DCPMM behind the x86 cache hierarchy):
                   persist).  Used by benchmarks where we measure real
                   software cost (copies, checksums, locking).
 
+The strict model is vectorized (DESIGN.md §1): instead of a dict of
+8-byte unit blobs and Python sets of line numbers, the device keeps
+
+  * ``_overlay``  — a full-size uint8 ndarray holding the newest (not yet
+                    persisted) bytes; only valid where ``_dirty`` is set,
+  * ``_dirty``    — one bool per 8-byte unit (the torn-write granule),
+  * ``_resident`` — one bool per cache line (the Fig. 6 LLC model),
+
+so ``write``/``read``/``persist``/``crash`` are slice assignments and
+boolean-mask copies.  A dirty unit's overlay content is always the *full*
+unit (partial stores are seeded from the durable image first), which is
+what makes ``crash()`` an independent keep/drop draw per unit — the same
+torn/reordered semantics the scalar model realized one dict entry at a
+time.
+
 Because this container has no Optane or RDMA NIC, hardware wait times are
 accounted in *virtual nanoseconds* via ``CostModel``: every operation
 returns the modelled ns it would take on the paper's testbed (Cascade
@@ -32,8 +47,8 @@ both clocks; see DESIGN.md §2.3.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Set
+from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -96,68 +111,88 @@ class PMEMDevice:
         self._lock = threading.Lock()
         # Durable image: what survives power loss *for sure*.
         self._durable = np.zeros(self.size, dtype=np.uint8)
-        # strict mode: volatile overlay, keyed by 8-byte-aligned offset.
-        self._volatile: Dict[int, bytes] = {}
+        self._n_units = (self.size + ATOM - 1) // ATOM
+        self._n_lines = (self.size + CACHE_LINE - 1) // CACHE_LINE
         # Cache-residency of lines (True while dirty in LLC).  Used for the
         # Fig. 6 effect: flushing evicts lines, so a subsequent NIC DMA read
         # misses LLC and must re-read from PMEM.  (clwb was implemented as an
         # evicting flush on the paper's CPUs — footnote 5.)
-        self._resident_lines: Set[int] = set()
+        self._resident = np.zeros(self._n_lines, dtype=bool)
+        if mode == "strict":
+            # Volatile overlay: newest bytes, valid only where _dirty is set.
+            self._overlay = np.zeros(self.size, dtype=np.uint8)
+            self._dirty = np.zeros(self._n_units, dtype=bool)
+        else:
+            self._overlay = None
+            self._dirty = None
+        self._dirty_count = 0
 
     # ------------------------------------------------------------------ #
     # store / load
     # ------------------------------------------------------------------ #
     def write(self, off: int, data: bytes | bytearray | memoryview | np.ndarray) -> float:
         """CPU stores to [off, off+len). Volatile until persisted. Returns vns."""
-        data = _as_bytes(data)
-        n = len(data)
+        arr = _as_array(data)
+        n = arr.size
         self._check(off, n)
+        if n == 0:
+            with self._lock:
+                self.stats.writes += 1
+            return 0.0
         if self.mode == "fast":
-            self._durable[off : off + n] = np.frombuffer(data, dtype=np.uint8)
+            self._durable[off : off + n] = arr
+            with self._lock:
+                self.stats.writes += 1
+                self.stats.bytes_written += n
+                self._resident[off // CACHE_LINE : (off + n - 1) // CACHE_LINE + 1] = True
         else:
-            self._write_strict(off, data)
-        with self._lock:
-            self.stats.writes += 1
-            self.stats.bytes_written += n
-            self._resident_lines.update(_lines(off, n))
+            with self._lock:
+                self._write_strict_locked(off, arr)
+                self.stats.writes += 1
+                self.stats.bytes_written += n
+                self._resident[off // CACHE_LINE : (off + n - 1) // CACHE_LINE + 1] = True
         return self.cost.store_byte_ns * n
 
-    def _write_strict(self, off: int, data: bytes) -> None:
-        """Split the store into 8-byte units in the volatile overlay."""
-        with self._lock:
-            pos = off
-            end = off + len(data)
-            while pos < end:
-                unit = pos - (pos % ATOM)
-                lo = max(pos, unit)
-                hi = min(end, unit + ATOM)
-                cur = bytearray(self._read_unit_locked(unit))
-                cur[lo - unit : hi - unit] = data[lo - off : hi - off]
-                self._volatile[unit] = bytes(cur)
-                pos = hi
+    def _write_strict_locked(self, off: int, arr: np.ndarray) -> None:
+        """Store into the overlay at 8-byte-unit granularity.
 
-    def _read_unit_locked(self, unit: int) -> bytes:
-        v = self._volatile.get(unit)
-        if v is not None:
-            return v
-        return self._durable[unit : min(unit + ATOM, self.size)].tobytes()
+        Boundary units that the store only partially covers are seeded
+        from the newest visible content first, so every dirty unit's
+        overlay slice is the complete unit — the invariant ``crash()``
+        and ``persist()`` rely on.
+        """
+        n = arr.size
+        u0 = off // ATOM
+        u1 = (off + n - 1) // ATOM + 1
+        dirty = self._dirty
+        if off % ATOM and not dirty[u0]:
+            s = u0 * ATOM
+            e = min(s + ATOM, self.size)
+            self._overlay[s:e] = self._durable[s:e]
+        if (off + n) % ATOM and not dirty[u1 - 1]:
+            s = (u1 - 1) * ATOM
+            e = min(s + ATOM, self.size)
+            self._overlay[s:e] = self._durable[s:e]
+        self._overlay[off : off + n] = arr
+        dslice = dirty[u0:u1]
+        self._dirty_count += int(dslice.size - np.count_nonzero(dslice))
+        dslice[:] = True
 
     def read(self, off: int, n: int) -> bytes:
         """CPU load: sees the newest (volatile-overlaid) data."""
         self._check(off, n)
-        if self.mode == "fast" or not self._volatile:
+        if self.mode == "fast" or self._dirty_count == 0 or n == 0:
             return self._durable[off : off + n].tobytes()
         with self._lock:
-            out = bytearray(self._durable[off : off + n].tobytes())
-            first = off - (off % ATOM)
-            for unit in range(first, off + n, ATOM):
-                v = self._volatile.get(unit)
-                if v is None:
-                    continue
-                lo = max(unit, off)
-                hi = min(unit + len(v), off + n)
-                out[lo - off : hi - off] = v[lo - unit : hi - unit]
-            return bytes(out)
+            u0 = off // ATOM
+            u1 = (off + n - 1) // ATOM + 1
+            dslice = self._dirty[u0:u1]
+            if not dslice.any():
+                return self._durable[off : off + n].tobytes()
+            out = self._durable[off : off + n].copy()
+            mask = np.repeat(dslice, ATOM)[off - u0 * ATOM : off - u0 * ATOM + n]
+            np.copyto(out, self._overlay[off : off + n], where=mask)
+            return out.tobytes()
 
     def view(self, off: int, n: int) -> Optional[memoryview]:
         """Direct load/store pointer into PMEM (the paper's reserve() returns
@@ -174,41 +209,58 @@ class PMEMDevice:
     def persist(self, off: int, n: int) -> float:
         """Guarantee [off, off+n) is durable.  Returns vns (writeback+fence).
 
-        Evicts the lines from the cache model (see _resident_lines note).
+        Evicts the lines from the cache model (see _resident note).  Every
+        8-byte unit *overlapping* the range is persisted whole (a clwb
+        flushes full lines; the scalar model did the same).
         """
         self._check(off, n)
-        lines = _lines(off, n)
         with self._lock:
-            if self.mode == "strict":
-                first = off - (off % ATOM)
-                for unit in range(first, off + n, ATOM):
-                    v = self._volatile.pop(unit, None)
-                    if v is not None:
-                        self._durable[unit : unit + len(v)] = np.frombuffer(
-                            v, dtype=np.uint8
-                        )
-            dirty = len(lines & self._resident_lines)
-            self._resident_lines -= lines
+            if self.mode == "strict" and n > 0 and self._dirty_count:
+                u0 = off // ATOM
+                u1 = (off + n - 1) // ATOM + 1
+                dslice = self._dirty[u0:u1]
+                ndirty = int(np.count_nonzero(dslice))
+                if ndirty:
+                    s = u0 * ATOM
+                    e = min(u1 * ATOM, self.size)
+                    mask = np.repeat(dslice, ATOM)[: e - s]
+                    np.copyto(self._durable[s:e], self._overlay[s:e],
+                              where=mask)
+                    self._dirty_count -= ndirty
+                    dslice[:] = False
+            if n > 0:
+                l0 = off // CACHE_LINE
+                l1 = (off + n - 1) // CACHE_LINE + 1
+                rslice = self._resident[l0:l1]
+                dirty_lines = int(np.count_nonzero(rslice))
+                rslice[:] = False
+            else:
+                dirty_lines = 0
             self.stats.flushes += 1
-            self.stats.lines_flushed += dirty
+            self.stats.lines_flushed += dirty_lines
             self.stats.fences += 1
         # clwb writebacks overlap; fence waits for the slowest. Model as
         # per-line issue cost + one fence drain.
-        return self.cost.line_writeback_ns * max(dirty, 1) + self.cost.fence_ns
+        return self.cost.line_writeback_ns * max(dirty_lines, 1) + self.cost.fence_ns
 
     def dma_read(self, off: int, n: int) -> tuple[bytes, float]:
         """Device-side (NIC) read of the *newest* data, as an RDMA HCA would
         snoop it.  Cost depends on LLC residency: lines evicted by a prior
         flush must be re-read from PMEM (the Fig. 6 effect)."""
         data = self.read(off, n)
-        lines = _lines(off, n)
         with self._lock:
-            miss = len(lines - self._resident_lines)
-            hit = len(lines) - miss
+            if n > 0:
+                l0 = off // CACHE_LINE
+                l1 = (off + n - 1) // CACHE_LINE + 1
+                n_lines = l1 - l0
+                hit = int(np.count_nonzero(self._resident[l0:l1]))
+                miss = n_lines - hit
+            else:
+                n_lines = hit = miss = 0
             self.stats.llc_misses += miss
             self.stats.llc_hits += hit
         vns = miss * self.cost.llc_miss_ns + n * self.cost.pmem_read_byte_ns * (
-            miss / max(len(lines), 1)
+            miss / max(n_lines, 1)
         )
         return data, vns
 
@@ -229,11 +281,14 @@ class PMEMDevice:
                               name=self.name)
         with self._lock:
             survivor._durable[:] = self._durable
-            for unit, v in self._volatile.items():
-                if rng.random() < keep_probability:
-                    survivor._durable[unit : unit + len(v)] = np.frombuffer(
-                        v, dtype=np.uint8
-                    )
+            if self.mode == "strict" and self._dirty_count:
+                units = np.flatnonzero(self._dirty)
+                kept = units[rng.random(units.size) < keep_probability]
+                if kept.size:
+                    mask_units = np.zeros(self._n_units, dtype=bool)
+                    mask_units[kept] = True
+                    bmask = np.repeat(mask_units, ATOM)[: self.size]
+                    np.copyto(survivor._durable, self._overlay, where=bmask)
         return survivor
 
     def corrupt(self, off: int, n: int, rng: Optional[np.random.Generator] = None,
@@ -250,7 +305,7 @@ class PMEMDevice:
     # ------------------------------------------------------------------ #
     def dirty_units(self) -> int:
         with self._lock:
-            return len(self._volatile)
+            return self._dirty_count
 
     def _check(self, off: int, n: int) -> None:
         if off < 0 or n < 0 or off + n > self.size:
@@ -264,17 +319,7 @@ class PMEMDevice:
                 f"dirty_units={self.dirty_units()})")
 
 
-def _lines(off: int, n: int) -> Set[int]:
-    if n <= 0:
-        return set()
-    first = off // CACHE_LINE
-    last = (off + n - 1) // CACHE_LINE
-    return set(range(first, last + 1))
-
-
-def _as_bytes(data) -> bytes:
+def _as_array(data) -> np.ndarray:
     if isinstance(data, np.ndarray):
-        return data.tobytes()
-    if isinstance(data, (bytearray, memoryview)):
-        return bytes(data)
-    return data
+        return np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+    return np.frombuffer(data, dtype=np.uint8)

@@ -16,6 +16,9 @@ import zlib
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip extra: test)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.log import Log, LogConfig, CorruptLogError

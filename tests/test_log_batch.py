@@ -1,0 +1,259 @@
+"""Tests for the batched append pipeline (DESIGN.md §3).
+
+Covers the satellite requirements of PR 1 explicitly:
+
+  * reserve_batch straddling the ring end emits a PAD record exactly
+    like the scalar path (same lsn/offset/extent layout on media);
+  * LogFullError from reserve_batch leaves no partially-reserved state;
+
+plus crash consistency of batched appends, policy batch hooks, the
+FLAG_PHASH integrity route, and bookkeeping parity with scalar appends.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Log, LogConfig, LogFullError, PMEMDevice, make_policy
+from repro.core.log import FLAG_PAD, FLAG_PHASH, REC_HDR_SIZE, _REC_HDR
+from repro.core.replication import device_size
+
+
+def fresh(capacity=1 << 14, mode="strict", **kw):
+    dev = PMEMDevice(device_size(capacity), mode=mode)
+    return dev, Log.create(dev, LogConfig(capacity=capacity, **kw))
+
+
+def rec_shape(log):
+    """Volatile layout fingerprint: lsn -> (off, size, extent, pad)."""
+    return {l: (r.off, r.size, r.extent, r.pad)
+            for l, r in sorted(log._recs.items())}
+
+
+# ------------------------------------------------------------------ #
+# scalar parity
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("mode", ["fast", "strict"])
+def test_batch_matches_scalar_layout_and_content(mode):
+    sizes = [10, 100, 8, 250, 0, 33]
+    payloads = [bytes([i + 1]) * s for i, s in enumerate(sizes)]
+    _, scalar = fresh(mode=mode)
+    for p in payloads:
+        scalar.append(p)
+    devb, batched = fresh(mode=mode)
+    batched.append_batch(payloads)
+    assert rec_shape(scalar) == rec_shape(batched)
+    assert dict(scalar.iter_records()) == dict(batched.iter_records())
+    assert scalar.durable_lsn == batched.durable_lsn
+    # recovery sees the same log
+    relog = Log.open(devb, LogConfig(capacity=1 << 14))
+    assert dict(relog.iter_records()) == dict(scalar.iter_records())
+
+
+def test_batch_wrap_emits_pad_exactly_like_scalar():
+    cap = 4096
+    lead = [b"L" * 200] * 9               # tail lands at ring offset 2016
+    tail_sizes = [1000, 1100, 30]         # second record straddles the end
+    _, scalar = fresh(cap)
+    devb, batched = fresh(cap)
+    for log in (scalar, batched):
+        for p in lead:
+            log.append(p)
+        for rid in range(1, 7):           # free room at the front
+            log.cleanup(rid)
+    batch_payloads = [b"W" * s for s in tail_sizes]
+    for p in batch_payloads:
+        scalar.append(p)
+    batched.append_batch(batch_payloads)
+
+    assert rec_shape(scalar) == rec_shape(batched)
+    pads = [(l, r) for l, r in batched._recs.items() if r.pad]
+    assert pads, "workload was sized to require a wrap PAD record"
+    for lsn, rec in pads:
+        raw_b = devb.read(rec.off, REC_HDR_SIZE)
+        plsn, psize, _, pflags = _REC_HDR.unpack(raw_b)
+        assert plsn == lsn and psize == rec.size
+        assert pflags & FLAG_PAD
+        # scalar log wrote the identical pad header bytes
+        assert scalar.dev.read(rec.off, REC_HDR_SIZE) == raw_b
+    assert dict(scalar.iter_records()) == dict(batched.iter_records())
+    relog = Log.open(devb, LogConfig(capacity=cap))
+    assert dict(relog.iter_records()) == dict(scalar.iter_records())
+
+
+def test_reserve_batch_logfull_leaves_no_state_behind():
+    cap = 4096
+    _, log = fresh(cap)
+    log.append(b"x" * 1000)
+    before = (log._tail_off, log._used, log._next_lsn, rec_shape(log))
+    with pytest.raises(LogFullError):
+        log.reserve_batch([1000, 1000, 1000, 1000])   # 4th cannot fit
+    assert (log._tail_off, log._used, log._next_lsn, rec_shape(log)) == before
+    # the log is still fully usable afterwards
+    lsns = log.append_batch([b"y" * 500, b"z" * 500])
+    assert lsns == [2, 3]
+    assert dict(log.iter_records())[3] == b"z" * 500
+
+
+def test_reserve_batch_rejects_bad_sizes_upfront():
+    _, log = fresh(4096)
+    before = (log._tail_off, log._used, log._next_lsn)
+    with pytest.raises(ValueError):
+        log.reserve_batch([16, -1])
+    with pytest.raises(ValueError):
+        log.reserve_batch([16, 1 << 20])              # larger than the ring
+    assert (log._tail_off, log._used, log._next_lsn) == before
+
+
+# ------------------------------------------------------------------ #
+# pipeline mechanics
+# ------------------------------------------------------------------ #
+def test_batch_coalesces_device_operations():
+    n = 64
+    dev, log = fresh(1 << 16)
+    s0 = dev.stats.snapshot()
+    log.append_batch([b"p" * 48] * n)
+    # one packed segment write + superline-free force: 1 flush, 1 fence
+    assert dev.stats.writes - s0.writes == 1
+    assert dev.stats.flushes - s0.flushes == 1
+    assert dev.stats.fences - s0.fences == 1
+
+
+def test_copy_batch_validates_bounds_and_arity():
+    _, log = fresh()
+    batch = log.reserve_batch([8, 8])
+    with pytest.raises(ValueError):
+        log.copy_batch(batch, [b"12345678"])           # arity mismatch
+    with pytest.raises(ValueError):
+        log.copy_batch(batch, [b"12345678", b"123456789"])  # too long
+    log.copy_batch(batch, [b"12345678", b"abcdefgh"])
+    log.complete_batch(batch)
+    with pytest.raises(Exception):
+        log.complete_batch(batch)                      # double complete
+    log.force_batch(batch)
+    assert dict(log.iter_records())[2] == b"abcdefgh"
+
+
+def test_batch_view_direct_assembly_and_empty_batch():
+    _, log = fresh()
+    assert log.append_batch([]) == []
+    batch = log.reserve_batch([4, 6])
+    batch.view(0)[:] = b"abcd"
+    batch.view(1)[:] = b"qwerty"
+    log.complete_batch(batch)
+    log.force_batch(batch)
+    got = dict(log.iter_records())
+    assert got == {1: b"abcd", 2: b"qwerty"}
+
+
+def test_force_batch_freq_picks_scalar_leader():
+    _, log = fresh()
+    batch = log.reserve_batch([8] * 3)        # lsns 1..3, no multiple of 4
+    log.copy_batch(batch, [b"a" * 8] * 3)
+    log.complete_batch(batch)
+    assert log.force_batch(batch, freq=4) == 0
+    assert log.durable_lsn == 0
+    batch2 = log.reserve_batch([8] * 7)       # lsns 4..10: leaders 4 and 8
+    log.copy_batch(batch2, [b"b" * 8] * 7)
+    log.complete_batch(batch2)
+    assert log.force_batch(batch2, freq=4) == 8   # largest leader covers 1..8
+    assert log.vulnerability_window() == 2        # 9, 10 still unforced
+
+
+# ------------------------------------------------------------------ #
+# force policies, batched hooks
+# ------------------------------------------------------------------ #
+def test_policies_on_complete_batch():
+    for name, kw, expect_durable in (
+            ("sync", dict(), 6),           # forces batch tail
+            ("freq", dict(freq=4), 4),     # leader 4 covers 1..4
+            ("group", dict(group_size=4), 6),  # 6 completes fill the window
+    ):
+        _, log = fresh()
+        pol = make_policy(name, **kw)
+        batch = log.reserve_batch([16] * 6)
+        log.copy_batch(batch, [b"q" * 16] * 6)
+        log.complete_batch(batch)
+        pol.on_complete_batch(log, batch.lsns)
+        assert log.durable_lsn == expect_durable, name
+        pol.drain(log)
+        assert log.durable_lsn == 6
+
+
+def test_group_policy_batch_counts_whole_batch():
+    _, log = fresh()
+    pol = make_policy("group", group_size=10)
+    for start in (1, 4):
+        batch = log.reserve_batch([8] * 3)
+        log.copy_batch(batch, [b"g" * 8] * 3)
+        log.complete_batch(batch)
+        pol.on_complete_batch(log, batch.lsns)
+        assert log.durable_lsn == 0           # 3, then 6 < 10: no force yet
+    batch = log.reserve_batch([8] * 4)        # crosses the window
+    log.copy_batch(batch, [b"g" * 8] * 4)
+    log.complete_batch(batch)
+    pol.on_complete_batch(log, batch.lsns)
+    assert log.durable_lsn == 10
+
+
+# ------------------------------------------------------------------ #
+# crash consistency of the batched path (strict device)
+# ------------------------------------------------------------------ #
+def test_batched_appends_survive_crash_like_scalar():
+    cap = 1 << 14
+    dev, log = fresh(cap)
+    written = {}
+    for r in range(5):
+        payloads = [bytes([r * 16 + i]) * (20 + 10 * i) for i in range(8)]
+        lsns = log.append_batch(payloads)     # sync force per batch
+        written.update(zip(lsns, payloads))
+    for seed in range(6):
+        surv = dev.crash(np.random.default_rng(seed), keep_probability=0.3)
+        relog = Log.open(surv, LogConfig(capacity=cap))
+        got = dict(relog.iter_records())
+        assert got == written                 # everything was forced
+    # unforced batch: may vanish, must never surface torn
+    batch = log.reserve_batch([64] * 4)
+    log.copy_batch(batch, [b"T" * 64] * 4)
+    log.complete_batch(batch)                 # completed, NOT forced
+    for seed in range(8):
+        surv = dev.crash(np.random.default_rng(seed), keep_probability=0.5)
+        relog = Log.open(surv, LogConfig(capacity=cap))
+        got = dict(relog.iter_records())
+        for lsn, payload in got.items():
+            expect = written.get(lsn, b"T" * 64)
+            assert payload == expect, f"record {lsn} torn or corrupt"
+
+
+# ------------------------------------------------------------------ #
+# FLAG_PHASH integrity route
+# ------------------------------------------------------------------ #
+def test_phash_records_roundtrip_recover_and_detect_corruption():
+    cap = 1 << 16
+    dev, log = fresh(cap, phash_threshold=256)
+    small = b"s" * 64
+    big = bytes(range(256)) * 8               # 2 KiB >= threshold
+    log.append_batch([small, big])
+    log.append(big)                           # scalar path uses phash too
+    raw = dev.read(log._recs[2].off, REC_HDR_SIZE)
+    _, _, _, flags = _REC_HDR.unpack(raw)
+    assert flags & FLAG_PHASH
+    raw = dev.read(log._recs[1].off, REC_HDR_SIZE)
+    _, _, _, flags = _REC_HDR.unpack(raw)
+    assert not (flags & FLAG_PHASH)           # small record keeps CRC32
+    relog = Log.open(dev, LogConfig(capacity=cap, phash_threshold=256))
+    got = dict(relog.iter_records())
+    assert got == {1: small, 2: big, 3: big}
+    # bit corruption in a phash-protected payload stops the scan there
+    dev.corrupt(relog._recs[2].off + REC_HDR_SIZE, 2048,
+                np.random.default_rng(5))
+    relog2 = Log.open(dev, LogConfig(capacity=cap, phash_threshold=256))
+    assert set(dict(relog2.iter_records())) == {1}
+
+
+def test_phash_disabled_by_default_config():
+    cap = 1 << 14
+    dev, log = fresh(cap)                     # default threshold 1 MiB >> cap
+    log.append_batch([b"x" * 2048])
+    raw = dev.read(log._recs[1].off, REC_HDR_SIZE)
+    _, _, _, flags = _REC_HDR.unpack(raw)
+    assert not (flags & FLAG_PHASH)

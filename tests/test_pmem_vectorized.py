@@ -1,0 +1,230 @@
+"""Equivalence regression: vectorized PMEMDevice vs. the scalar model.
+
+The PR-1 vectorization replaced the dict-of-units / set-of-lines strict
+model with ndarray overlay + bitmasks.  These tests pin the semantics to
+the old model by porting it here (``RefPMEM`` below is the pre-PR-1
+implementation, trimmed to strict-mode essentials) and property-checking:
+
+  * overlay ``read()`` correctness at unaligned offsets under random
+    interleavings of write/persist;
+  * ``persist()`` line-eviction accounting — DeviceStats fields unchanged;
+  * ``crash()`` torn-write behavior: deterministic cases (keep 0/1) match
+    exactly; probabilistic cases match in distribution and never tear
+    *within* an 8-byte unit.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.pmem import ATOM, CACHE_LINE, PMEMDevice
+
+
+# ---------------------------------------------------------------------- #
+# reference: the seed's scalar strict-mode model (dict + sets)
+# ---------------------------------------------------------------------- #
+class RefPMEM:
+    def __init__(self, size):
+        self.size = size
+        self.durable = np.zeros(size, dtype=np.uint8)
+        self.volatile = {}            # 8-aligned offset -> bytes
+        self.resident = set()         # line numbers dirty in LLC
+        self.flushes = self.lines_flushed = self.fences = 0
+        self.llc_misses = self.llc_hits = 0
+
+    @staticmethod
+    def _lines(off, n):
+        if n <= 0:
+            return set()
+        return set(range(off // CACHE_LINE, (off + n - 1) // CACHE_LINE + 1))
+
+    def _read_unit(self, unit):
+        v = self.volatile.get(unit)
+        if v is not None:
+            return v
+        return self.durable[unit : min(unit + ATOM, self.size)].tobytes()
+
+    def write(self, off, data):
+        pos, end = off, off + len(data)
+        while pos < end:
+            unit = pos - (pos % ATOM)
+            lo, hi = max(pos, unit), min(end, unit + ATOM)
+            cur = bytearray(self._read_unit(unit))
+            cur[lo - unit : hi - unit] = data[lo - off : hi - off]
+            self.volatile[unit] = bytes(cur)
+            pos = hi
+        self.resident |= self._lines(off, len(data))
+
+    def read(self, off, n):
+        out = bytearray(self.durable[off : off + n].tobytes())
+        first = off - (off % ATOM)
+        for unit in range(first, off + n, ATOM):
+            v = self.volatile.get(unit)
+            if v is None:
+                continue
+            lo, hi = max(unit, off), min(unit + len(v), off + n)
+            out[lo - off : hi - off] = v[lo - unit : hi - unit]
+        return bytes(out)
+
+    def persist(self, off, n):
+        lines = self._lines(off, n)
+        first = off - (off % ATOM)
+        for unit in range(first, off + n, ATOM):
+            v = self.volatile.pop(unit, None)
+            if v is not None:
+                self.durable[unit : unit + len(v)] = np.frombuffer(
+                    v, dtype=np.uint8)
+        self.flushes += 1
+        self.lines_flushed += len(lines & self.resident)
+        self.fences += 1
+        self.resident -= lines
+
+    def dma_account(self, off, n):
+        lines = self._lines(off, n)
+        miss = len(lines - self.resident)
+        self.llc_misses += miss
+        self.llc_hits += len(lines) - miss
+
+    def crash_keep_all(self):
+        out = self.durable.copy()
+        for unit, v in self.volatile.items():
+            out[unit : unit + len(v)] = np.frombuffer(v, dtype=np.uint8)
+        return out
+
+
+SIZE = 4096
+
+
+def random_ops(seed, n_ops=120):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(n_ops):
+        kind = rng.choice(["write", "write", "write", "persist", "read"])
+        off = int(rng.integers(0, SIZE - 1))
+        n = int(rng.integers(1, min(200, SIZE - off)))
+        data = rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+        ops.append((kind, off, n, data))
+    return ops
+
+
+def drive(seed):
+    dev = PMEMDevice(SIZE, mode="strict")
+    ref = RefPMEM(SIZE)
+    for kind, off, n, data in random_ops(seed):
+        if kind == "write":
+            dev.write(off, data)
+            ref.write(off, data)
+        elif kind == "persist":
+            dev.persist(off, n)
+            ref.persist(off, n)
+        else:
+            assert dev.read(off, n) == ref.read(off, n), \
+                f"overlay read mismatch at [{off}, {off + n})"
+    return dev, ref
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_interleaving_matches_reference(seed):
+    dev, ref = drive(seed)
+    # full-device read (overlay applied) must match byte for byte
+    assert dev.read(0, SIZE) == ref.read(0, SIZE)
+    # volatile bookkeeping agrees
+    assert dev.dirty_units() == len(ref.volatile)
+    # persist()/flush accounting identical (the Fig. 5b/6 contract)
+    assert dev.stats.flushes == ref.flushes
+    assert dev.stats.lines_flushed == ref.lines_flushed
+    assert dev.stats.fences == ref.fences
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_crash_deterministic_extremes_match_reference(seed):
+    dev, ref = drive(seed)
+    # keep nothing: exactly the durable image
+    lost = dev.crash(np.random.default_rng(0), keep_probability=0.0)
+    assert lost.read(0, SIZE) == ref.durable.tobytes()
+    # keep everything: durable + full overlay
+    kept = dev.crash(np.random.default_rng(0), keep_probability=1.0)
+    assert kept.read(0, SIZE) == ref.crash_keep_all().tobytes()
+
+
+def test_crash_never_tears_within_a_unit_and_matches_keep_rate():
+    dev, ref = drive(3)
+    old = ref.durable
+    new = np.frombuffer(ref.crash_keep_all().tobytes(), dtype=np.uint8)
+    dirty = sorted(ref.volatile)
+    kept_fracs = []
+    for seed in range(200):
+        surv = dev.crash(np.random.default_rng(seed), keep_probability=0.5)
+        img = np.frombuffer(surv.read(0, SIZE), dtype=np.uint8)
+        kept = 0
+        for unit in dirty:
+            hi = min(unit + ATOM, SIZE)
+            got = img[unit:hi]
+            if np.array_equal(got, new[unit:hi]):
+                kept += 1
+            else:
+                # not kept => must be exactly the old durable content
+                assert np.array_equal(got, old[unit:hi]), \
+                    f"unit {unit} torn within the 8-byte atom"
+        # bytes outside dirty units never change
+        mask = np.ones(SIZE, dtype=bool)
+        for unit in dirty:
+            mask[unit : min(unit + ATOM, SIZE)] = False
+        assert np.array_equal(img[mask], old[mask])
+        kept_fracs.append(kept / max(len(dirty), 1))
+    # iid Bernoulli(0.5) per unit: the mean keep rate concentrates
+    assert 0.4 < float(np.mean(kept_fracs)) < 0.6
+
+
+def test_unaligned_partial_writes_seed_boundary_units():
+    dev = PMEMDevice(128, mode="strict")
+    ref = RefPMEM(128)
+    # durable background, then partial overlay writes at odd offsets
+    for d in (dev, ref):
+        d.write(0, bytes(range(64)))
+        d.persist(0, 64)
+    for off, blob in ((3, b"ABC"), (13, b"Z"), (62, b"WXY"), (7, b"q")):
+        dev.write(off, blob)
+        ref.write(off, blob)
+    for off, n in ((0, 64), (1, 9), (3, 3), (5, 17), (60, 8), (62, 3)):
+        assert dev.read(off, n) == ref.read(off, n), (off, n)
+    # a crash keeping everything must show the merged units, not garbage
+    surv = dev.crash(np.random.default_rng(1), keep_probability=1.0)
+    assert surv.read(0, 66) == ref.crash_keep_all()[:66].tobytes()
+
+
+def test_dma_read_llc_accounting_matches_reference():
+    dev = PMEMDevice(SIZE, mode="strict")
+    ref = RefPMEM(SIZE)
+    for d in (dev, ref):
+        d.write(0, b"a" * 256)            # lines 0..3 resident
+        d.persist(128, 64)                # evicts line 2
+    dev.dma_read(0, 256)
+    ref.dma_account(0, 256)
+    assert dev.stats.llc_misses == ref.llc_misses == 1
+    assert dev.stats.llc_hits == ref.llc_hits == 3
+
+
+def test_fast_mode_write_through_and_stats():
+    dev = PMEMDevice(1024, mode="fast")
+    dev.write(100, b"hello")
+    assert dev.dirty_units() == 0          # write-through: nothing volatile
+    assert dev.read(100, 5) == b"hello"
+    assert dev.crash(np.random.default_rng(0), 0.0).read(100, 5) == b"hello"
+    dev.persist(64, 128)
+    assert dev.stats.flushes == 1 and dev.stats.fences == 1
+    assert dev.stats.lines_flushed == 1    # only line 1 was resident
+
+
+def test_empty_and_boundary_accesses():
+    dev = PMEMDevice(256, mode="strict")
+    assert dev.read(0, 0) == b""
+    dev.write(0, b"")                      # counted, no bytes
+    assert dev.stats.writes == 1 and dev.stats.bytes_written == 0
+    dev.write(248, b"12345678")            # last full unit
+    assert dev.read(248, 8) == b"12345678"
+    dev.persist(248, 8)
+    assert dev.dirty_units() == 0
+    with pytest.raises(ValueError):
+        dev.write(250, b"123456789")       # out of bounds
+    with pytest.raises(ValueError):
+        dev.read(-1, 4)

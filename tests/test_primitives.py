@@ -4,6 +4,9 @@ log composes."""
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip extra: test)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (AtomicRegion, IntegrityRegion, LF_REP, Log,

@@ -9,6 +9,8 @@ from repro.core import (CopyAccessor, ClusterManager, Log, LogConfig, Node,
 from repro.core.log import ring_offset
 from repro.core.transport import ReplicaServer, ReplicationGroup, Transport
 
+pytestmark = pytest.mark.slow   # spins up replica servers per test
+
 CAP = 1 << 16
 
 

@@ -14,6 +14,8 @@ import pytest
 
 from repro.core import (CopyAccessor, Log, LogConfig, PMEMDevice,
                         build_replica_set, device_size, quorum_recover)
+
+pytestmark = pytest.mark.slow   # full failure matrix: transports + crashes
 from repro.core.baselines import FlexLog, PMDKLog, QueryFreshLog
 from repro.core.transport import ReplicaServer, ReplicationGroup, Transport
 
