@@ -5,10 +5,16 @@
 (c) LLC miss counts per ordering (the mechanism: flushing first evicts
     the source lines the NIC then has to re-read from PMEM);
 (d) throughput vs number of backups (adding backups beyond the first
-    barely matters: writes fan out in parallel).
+    barely matters: writes fan out in parallel);
+(e) straggler tolerance (PR 2) — with W < N the W-th-ack fast path
+    returns as soon as the quorum fills: one slow backup must not bound
+    replicate wall-clock (it catches up on its FIFO lane in the
+    background).
 """
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -73,9 +79,34 @@ def backup_scaling(quick: bool = False):
              f"model_ops_s={1e9 / mean:.0f}")
 
 
+def straggler_tolerance(quick: bool = False):
+    n = 10 if quick else 30
+    delay_s = 0.05 if quick else 0.1
+    payload = b"s" * 1024
+    for inject in (False, True):
+        rs = build_replica_set(mode="local+remote", capacity=1 << 22,
+                               n_backups=2, write_quorum=2)
+        for _ in range(8):
+            rs.log.append(payload)                 # warm
+        if inject:
+            rs.transports[1].inject(delay_s=delay_s)
+        walls = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            rs.log.append(payload)
+            walls.append(time.perf_counter() - t0)
+        rs.group.drain()
+        rs.shutdown()
+        tag = f"delay{delay_s * 1e3:.0f}ms" if inject else "baseline"
+        emit(f"fig6e/straggler/{tag}", float(np.max(walls)) * 1e6,
+             f"worst_wall_ms={np.max(walls) * 1e3:.2f};"
+             f"mean_wall_ms={np.mean(walls) * 1e3:.2f}")
+
+
 def run(quick: bool = False):
     flush_ordering(quick)
     backup_scaling(quick)
+    straggler_tolerance(quick)
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ import time
 from repro.core import (CopyAccessor, Log, LogConfig, PMEMDevice,
                         quorum_recover)
 from repro.core.baselines import FlexLog, PMDKLog
+from repro.core.log import ring_offset
 from repro.core.replication import build_replica_set, device_size
 
 from .common import emit
@@ -25,11 +26,15 @@ def _fill_arcadia(cap):
     dev = PMEMDevice(device_size(cap))
     log = Log.create(dev, LogConfig(capacity=cap))
     payload = b"r" * REC
-    while True:
+    try:
+        while True:
+            log.append_batch([payload] * 64)
+    except Exception:
         try:
-            log.append(payload)
+            while True:
+                log.append(payload)
         except Exception:
-            break
+            pass
     return dev, log
 
 
@@ -73,20 +78,46 @@ def replicated_recovery(quick: bool = False):
     except Exception:
         pass
     devs = rs.server_devices()
-    # normal: all copies present
+    # normal: all copies present — repair ships only the epoch bump
     accs = [CopyAccessor.for_device(n, d) for n, d in devs.items()]
     t0 = time.perf_counter()
-    quorum_recover(accs, rs.cfg, write_quorum=2, local_name=rs.primary_id)
+    _, rep = quorum_recover(accs, rs.cfg, write_quorum=2,
+                            local_name=rs.primary_id)
     ms = (time.perf_counter() - t0) * 1e3
-    emit(f"fig7b/quorum/normal/{cap >> 20}MB", ms * 1e3, f"ms={ms:.2f}")
+    wire = sum(rep.repair_bytes.values())
+    emit(f"fig7b/quorum/normal/{cap >> 20}MB", ms * 1e3,
+         f"ms={ms:.2f};repair_bytes={wire}")
     # worst case: primary media lost, rebuild from backups
     accs = [CopyAccessor.for_device(n, d) for n, d in devs.items()
             if n != rs.primary_id]
     t0 = time.perf_counter()
-    quorum_recover(accs, rs.cfg, write_quorum=2, local_name="rebuilt")
+    _, rep = quorum_recover(accs, rs.cfg, write_quorum=2,
+                            local_name="rebuilt")
     ms = (time.perf_counter() - t0) * 1e3
+    wire = sum(rep.repair_bytes.values())
     emit(f"fig7b/quorum/primary_lost/{cap >> 20}MB", ms * 1e3,
-         f"ms={ms:.2f}")
+         f"ms={ms:.2f};repair_bytes={wire}")
+    # lagging backup: one copy missed the tail; repair cost ~ divergence
+    rs2 = build_replica_set(mode="local+remote", capacity=cap, n_backups=2,
+                            write_quorum=2)
+    try:
+        for _ in range(cap // (4 * REC)):
+            rs2.log.append(payload)
+        rs2.fail_backup("node2")
+        for _ in range(64):
+            rs2.log.append(payload)
+    except Exception:
+        pass
+    accs = [CopyAccessor.for_device(n, d)
+            for n, d in rs2.server_devices().items()]
+    t0 = time.perf_counter()
+    _, rep = quorum_recover(accs, rs2.cfg, write_quorum=2,
+                            local_name=rs2.primary_id)
+    ms = (time.perf_counter() - t0) * 1e3
+    emit(f"fig7b/quorum/lagging_backup/{cap >> 20}MB", ms * 1e3,
+         f"ms={ms:.2f};repair_bytes={sum(rep.repair_bytes.values())};"
+         f"image_bytes={ring_offset() + cap}")
+    rs2.shutdown()
     rs.shutdown()
 
 

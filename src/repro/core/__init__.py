@@ -15,7 +15,8 @@ Public surface:
 
 from .pmem import CACHE_LINE, ATOM, CostModel, DeviceStats, PMEMDevice
 from .primitives import (AtomicRegion, IntegrityRegion, LF_REP, ORDERINGS,
-                         PARALLEL, REP_LF, persist, write_and_force)
+                         PARALLEL, REP_LF, persist, write_and_force,
+                         write_and_force_segs)
 from .log import (Batch, CorruptLogError, Log, LogConfig, LogError,
                   LogFullError, Superline)
 from .force_policy import (ForcePolicy, FreqPolicy, GroupCommitPolicy,
@@ -30,7 +31,7 @@ from .cluster import ClusterManager, Node
 __all__ = [
     "CACHE_LINE", "ATOM", "CostModel", "DeviceStats", "PMEMDevice",
     "AtomicRegion", "IntegrityRegion", "LF_REP", "ORDERINGS", "PARALLEL",
-    "REP_LF", "persist", "write_and_force",
+    "REP_LF", "persist", "write_and_force", "write_and_force_segs",
     "Batch", "CorruptLogError", "Log", "LogConfig", "LogError",
     "LogFullError", "Superline",
     "ForcePolicy", "FreqPolicy", "GroupCommitPolicy", "SyncPolicy",

@@ -84,6 +84,62 @@ def write_and_force(
     raise ValueError(f"unknown ordering {ordering!r}")
 
 
+def write_and_force_segs(
+    dev: PMEMDevice,
+    segs,
+    repl: Optional[ReplicationGroup] = None,
+    ordering: str = REP_LF,
+    local_durable: bool = True,
+) -> float:
+    """Replication primitive over a scatter list of (off, n) ranges.
+
+    One doorbell-batched ``replicate_batch`` round covers every range —
+    one wire round trip and one W-th-ack quorum wait for the whole list —
+    while the local flushes run per range (the same clwb+sfence sequence
+    the per-range path issues, so local DeviceStats are unchanged).  For
+    a single range this is cost- and stat-identical to write_and_force;
+    the log's force path uses it so a ring-wrap (two segments) no longer
+    pays two quorum rounds.
+    """
+    segs = [(off, n) for off, n in segs]
+    if not segs:
+        return 0.0
+    if len(segs) == 1 or repl is None or not repl.live_transports():
+        vns = 0.0
+        if repl is None:
+            for off, n in segs:
+                vns += dev.persist(off, n) if local_durable else 0.0
+            return vns
+        if not repl.live_transports():
+            for off, n in segs:
+                vns += dev.persist(off, n) if local_durable else 0.0
+            if repl.write_quorum > (1 if repl.local_is_durable else 0):
+                raise QuorumError("no live backups and local copy alone "
+                                  f"cannot meet W={repl.write_quorum}")
+            return vns
+        off, n = segs[0]
+        return write_and_force(dev, off, n, repl, ordering,
+                               local_durable=local_durable)
+
+    def _persist_all() -> float:
+        if not local_durable:
+            return 0.0
+        return sum(dev.persist(off, n) for off, n in segs)
+
+    if ordering == REP_LF:
+        rep_vns = repl.replicate_batch(dev, segs, local_ack_vns=0.0)
+        return rep_vns + _persist_all()
+    if ordering == LF_REP:
+        loc_vns = _persist_all()
+        return loc_vns + repl.replicate_batch(dev, segs,
+                                              local_ack_vns=loc_vns)
+    if ordering == PARALLEL:
+        loc_vns = _persist_all()
+        rep_vns = repl.replicate_batch(dev, segs, local_ack_vns=loc_vns)
+        return loc_vns + rep_vns + 0.1 * min(loc_vns, rep_vns)
+    raise ValueError(f"unknown ordering {ordering!r}")
+
+
 # ---------------------------------------------------------------------- #
 # Integrity primitive (Listing 1)
 # ---------------------------------------------------------------------- #

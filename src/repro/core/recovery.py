@@ -25,15 +25,27 @@ surviving media image.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .log import (CorruptLogError, Log, LogConfig, Superline, ring_offset,
                   superline_region)
-from .pmem import PMEMDevice
+from .pmem import CACHE_LINE, PMEMDevice
 from .transport import (QuorumError, ReplicaServer, ReplicationGroup,
                         Transport, TransportError)
+
+# The exceptions a replica access is allowed to fail with during recovery:
+# transport timeouts/partitions/fencing, OS-level media errors, and
+# out-of-bounds device access (a copy with the wrong geometry).  Anything
+# else is a programming error and must propagate.
+MEDIA_ERRORS = (TransportError, OSError, ValueError)
+
+# Repair diff granularity: a whole number of cache lines (the media's
+# natural write unit), so each shipped range is cache-line-aligned within
+# its region.  §4.2's idempotence argument ("only differing bytes are
+# rewritten") binds repair cost to divergence size, not image size.
+REPAIR_CHUNK = 16 * CACHE_LINE
 
 
 class RecoveryError(Exception):
@@ -72,6 +84,7 @@ class CopyAccessor:
 class CopyState:
     acc: CopyAccessor
     image: Optional[PMEMDevice] = None       # local scratch reconstruction
+    raw: Optional[np.ndarray] = None         # pristine wire image (pre-stamp)
     superline: Optional[Superline] = None
     last_lsn: int = -1
     readable: bool = False
@@ -87,17 +100,20 @@ class RecoveryReport:
     new_epoch: int
     chosen: str = ""
     repaired: List[str] = field(default_factory=list)
+    repair_bytes: Dict[str, int] = field(default_factory=dict)
     last_lsn: int = 0
 
 
 def _load_copy(acc: CopyAccessor, cfg: LogConfig) -> CopyState:
-    """Pull a replica's media into a scratch device and validate it."""
+    """Pull a replica's media into a scratch device in ONE bulk read and
+    validate it; the pristine bytes are kept for the repair diff."""
     st = CopyState(acc=acc)
     try:
         raw = acc.read(0, ring_offset() + cfg.capacity)
-    except (TransportError, Exception) as e:  # unreachable / media gone
+    except MEDIA_ERRORS as e:  # unreachable / media gone
         st.error = f"unreachable: {e}"
         return st
+    st.raw = np.frombuffer(raw, dtype=np.uint8)
     img = PMEMDevice(acc.size, mode="fast", name=f"scratch/{acc.name}")
     img.write(0, raw)
     img.persist(0, len(raw))
@@ -111,6 +127,35 @@ def _load_copy(acc: CopyAccessor, cfg: LogConfig) -> CopyState:
     st.last_lsn = log.next_lsn - 1
     st.readable = st.superline is not None
     return st
+
+
+def _diff_ranges(golden: np.ndarray, current: np.ndarray, base: int,
+                 chunk: int = REPAIR_CHUNK) -> List[Tuple[int, int]]:
+    """Coalesced [start, end) byte ranges (offset by ``base``) where
+    ``current`` differs from ``golden``, on chunk-aligned boundaries.
+
+    One vectorized compare over the region, one any() reduction per
+    chunk, adjacent dirty chunks merged — the repair fan-out ships these
+    ranges instead of the whole image.
+    """
+    n = golden.size
+    if n == 0:
+        return []
+    neq = golden != current
+    nchunks = -(-n // chunk)
+    pad = nchunks * chunk - n
+    if pad:
+        neq = np.concatenate([neq, np.zeros(pad, dtype=bool)])
+    dirty = np.flatnonzero(neq.reshape(nchunks, chunk).any(axis=1))
+    if dirty.size == 0:
+        return []
+    breaks = np.flatnonzero(np.diff(dirty) > 1) + 1
+    ranges = []
+    for run in np.split(dirty, breaks):
+        start = int(run[0]) * chunk
+        end = min((int(run[-1]) + 1) * chunk, n)
+        ranges.append((base + start, base + end))
+    return ranges
 
 
 def quorum_recover(
@@ -152,22 +197,36 @@ def quorum_recover(
     chosen_log._write_superline()
     golden = best.image.read(0, ring_offset() + cfg.capacity)
 
-    # repair: rewrite only copies that differ (idempotent under re-crash)
+    # repair: ship only the differing ranges (chunked diff against each
+    # copy's pristine wire image — §4.2: "only differing bytes are
+    # rewritten", which also makes repeated recovery attempts idempotent
+    # and bounds repair traffic by divergence, not image size).
+    golden_arr = np.frombuffer(golden, dtype=np.uint8)
+    head_len = ring_offset()
     ok_writes = 0
     for s in states:
         try:
-            if s.readable and s.acc is best.acc:
-                s.acc.write(0, golden)        # epoch bump on the winner too
-                ok_writes += 1
-                continue
-            current = s.image.read(0, len(golden)) if s.image else b""
-            if current != golden:
+            if s.raw is None:
+                # copy was never readable: rebuild it wholesale
                 s.acc.write(0, golden)
                 report.repaired.append(s.acc.name)
-            else:
-                s.acc.write(0, golden[:ring_offset()])  # superline/epoch only
+                report.repair_bytes[s.acc.name] = len(golden)
+                ok_writes += 1
+                continue
+            # superline region diffed separately from the ring so the
+            # (always-differing) epoch bump never drags ring chunks along
+            ranges = _diff_ranges(golden_arr[:head_len], s.raw[:head_len], 0)
+            ranges += _diff_ranges(golden_arr[head_len:], s.raw[head_len:],
+                                   head_len)
+            shipped = 0
+            for a, b in ranges:
+                s.acc.write(a, golden[a:b])
+                shipped += b - a
+            report.repair_bytes[s.acc.name] = shipped
+            if any(b > head_len for _, b in ranges):   # ring bytes differed
+                report.repaired.append(s.acc.name)
             ok_writes += 1
-        except (TransportError, Exception):
+        except MEDIA_ERRORS:
             continue
     if ok_writes < write_quorum:
         raise RecoveryError(

@@ -25,9 +25,11 @@ on true content.
 from __future__ import annotations
 
 import threading
-from concurrent.futures import ThreadPoolExecutor
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, \
+    wait
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from .pmem import CostModel, PMEMDevice
 
@@ -95,6 +97,7 @@ class FailureSpec:
 
     drop: bool = False          # partition: all ops time out
     fail_after_ops: int = -1    # fail once op counter passes this (-1 = never)
+    delay_s: float = 0.0        # straggler: wall-clock stall per op
 
 
 class Transport:
@@ -126,6 +129,8 @@ class Transport:
         self._ops += 1
         if self._closed:
             raise TransportError("transport closed")
+        if self.failure.delay_s > 0:
+            time.sleep(self.failure.delay_s)   # injected straggler stall
         if self.failure.drop:
             raise TransportError(f"timeout after {self.timeout_ns:.0f} vns "
                                  f"(partition to {self.server.server_id})")
@@ -156,6 +161,26 @@ class Transport:
                                                   self.primary_id)
         return wire_vns + remote_vns
 
+    def write_imm_batch(self, src_dev: PMEMDevice,
+                        segs: Sequence[Tuple[int, int]]) -> float:
+        """Doorbell-batched replication: the scatter list of (off, n)
+        ranges is posted as ONE WQE chain — one round trip on the wire —
+        while the remote side runs the persistence primitive per range
+        (identical remote DeviceStats to per-range write_imm)."""
+        self._gate()
+        vns = 0.0
+        total = 0
+        datas = []
+        for off, n in segs:
+            data, read_vns = src_dev.dma_read(off, n)   # NIC DMA per range
+            vns += read_vns
+            total += n
+            datas.append((off, data))
+        vns += self.cost.rdma_rtt_ns + total * self.cost.rdma_byte_ns
+        for off, data in datas:
+            vns += self.server.handle_write_imm(off, data, self.primary_id)
+        return vns
+
     def read(self, off: int, n: int) -> Tuple[bytes, float]:
         """One-sided RDMA Read (recovery/repair path)."""
         self._gate()
@@ -168,9 +193,18 @@ class ReplicationGroup:
 
     Writes are issued to every live backup in parallel (the paper: "RDMA
     Writes are initiated to all backups in parallel"); completion is the
-    W-th fastest ack.  A timed-out/failed backup is evicted (connection
-    closed) so a transient partition cannot leave an inconsistent backup
-    attached (§4.2 Replication).
+    W-th fastest ack — ``replicate`` returns as soon as W acks are in and
+    harvests straggler completions in the background.  A timed-out/failed
+    backup is evicted (connection closed) so a transient partition cannot
+    leave an inconsistent backup attached (§4.2 Replication).
+
+    Each transport gets its own single-worker lane, modelling the FIFO
+    ordering of an RDMA reliable-connection QP: writes to one backup
+    execute in submission order, so a straggler's late failure closes the
+    transport *before* any later write on that lane runs — a backup can
+    be behind, but it can never observe a gap.  (Future done-callbacks
+    fire before the lane worker dequeues its next task, and a closed
+    transport fails every queued op at the gate.)
     """
 
     def __init__(self, transports: List[Transport], write_quorum: int,
@@ -181,9 +215,18 @@ class ReplicationGroup:
         n = self.n_replicas
         if not (0 < self.write_quorum <= n):
             raise ValueError(f"W={write_quorum} invalid for N={n}")
-        self._pool = (ThreadPoolExecutor(max_workers=max(1, len(transports)),
-                                         thread_name_prefix="repl")
-                      if transports else None)
+        self._lanes = {
+            t: ThreadPoolExecutor(
+                max_workers=1,
+                thread_name_prefix=f"repl-{t.server.server_id}")
+            for t in self.transports
+        }
+        # _pending tracks in-flight lane ops; an op leaves the set only
+        # AFTER its harvest (eviction / error stash) has been applied, so
+        # drain() observing an empty set implies all side effects landed.
+        self._pending_cv = threading.Condition()
+        self._pending: set[Future] = set()
+        self._errors: List[BaseException] = []
 
     # N and R per §4.2: R + W > N  =>  R = N - W + 1
     @property
@@ -197,6 +240,92 @@ class ReplicationGroup:
     def live_transports(self) -> List[Transport]:
         return [t for t in self.transports if not t.closed]
 
+    # -- straggler bookkeeping -------------------------------------------- #
+    def _submit(self, t: Transport,
+                op: Callable[[Transport], float]) -> Future:
+        fut = self._lanes[t].submit(op, t)
+        with self._pending_cv:
+            self._pending.add(fut)
+        fut.add_done_callback(lambda f, t=t: self._harvest(t, f))
+        return fut
+
+    def _harvest(self, t: Transport, fut: Future) -> None:
+        """Done-callback for every lane op: evict the backup on a (late)
+        TransportError; stash anything else for the next caller.  The
+        future leaves _pending only after those effects are applied."""
+        if not fut.cancelled():
+            exc = fut.exception()
+            if isinstance(exc, TransportError):
+                t.close()   # evict: avoids inconsistent half-attached backup
+            elif exc is not None:
+                with self._pending_cv:
+                    self._errors.append(exc)
+        with self._pending_cv:
+            self._pending.discard(fut)
+            self._pending_cv.notify_all()
+
+    def _raise_deferred(self) -> None:
+        with self._pending_cv:
+            if not self._errors:
+                return
+            exc = self._errors.pop(0)
+        raise exc
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Wait until every in-flight straggler op has completed AND its
+        harvest (eviction, error stash) has been applied, then surface
+        any non-transport error a straggler raised.  Returns False if
+        ``timeout`` expired with ops still in flight (their side effects
+        have NOT all landed yet)."""
+        with self._pending_cv:
+            snapshot = set(self._pending)
+            drained = self._pending_cv.wait_for(
+                lambda: not (snapshot & self._pending), timeout=timeout)
+        self._raise_deferred()
+        return drained
+
+    # -- quorum rounds ----------------------------------------------------- #
+    def _quorum_round(self, op: Callable[[Transport], float],
+                      local_ack_vns: Optional[float]) -> float:
+        """Issue ``op`` on every live lane; return at the W-th ack.
+
+        The returned figure is the W-th smallest ack vns among the acks
+        collected when the quorum filled.  Stragglers keep running on
+        their lanes and are harvested in the background (eviction on late
+        TransportError happens before that lane's next op).  Raises
+        QuorumError as soon as the quorum is arithmetically unreachable.
+        """
+        self._raise_deferred()
+        acks: List[float] = []
+        if self.local_is_durable and local_ack_vns is not None:
+            acks.append(local_ack_vns)
+        pending = {self._submit(t, op) for t in self.live_transports()}
+        w = self.write_quorum
+        while len(acks) < w:
+            if len(acks) + len(pending) < w:
+                raise QuorumError(
+                    f"write quorum {w} not met "
+                    f"({len(acks)}/{self.n_replicas} acks)")
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            for fut in done:
+                exc = fut.exception()
+                if exc is None:
+                    acks.append(fut.result())
+                elif not isinstance(exc, TransportError):
+                    # programming error: never swallow — raise here, and
+                    # un-stash the harvest's copy so it doesn't re-raise
+                    # on a later unrelated call
+                    with self._pending_cv:
+                        self._pending_cv.wait_for(
+                            lambda: fut not in self._pending, timeout=5.0)
+                        try:
+                            self._errors.remove(exc)
+                        except ValueError:
+                            pass
+                    raise exc
+        acks.sort()
+        return acks[w - 1]
+
     def replicate(self, src_dev: PMEMDevice, src_off: int, dst_off: int,
                   n: int, local_ack_vns: float = 0.0) -> float:
         """Replicate+force [src_off, src_off+n) to every backup; wait for a
@@ -204,44 +333,30 @@ class ReplicationGroup:
         the local durable copy (0 if none / already persisted).
 
         Returns the vns at which the W-th ack arrived.  Raises QuorumError
-        if the quorum cannot be met; failed backups are evicted first.
+        if the quorum cannot be met; failed backups are evicted (at the
+        latest, before the next replicate reuses their lane).
         """
-        acks: List[float] = []
-        if self.local_is_durable:
-            acks.append(local_ack_vns)
-        live = self.live_transports()
-        if live:
-            futs = {self._pool.submit(t.write_imm, src_dev, src_off, dst_off, n): t
-                    for t in live}
-            for fut, t in futs.items():
-                try:
-                    acks.append(fut.result())
-                except TransportError:
-                    t.close()   # evict: avoids inconsistent half-attached backup
-        if len(acks) < self.write_quorum:
-            raise QuorumError(
-                f"write quorum {self.write_quorum} not met "
-                f"({len(acks)}/{self.n_replicas} acks)")
-        acks.sort()
-        return acks[self.write_quorum - 1]
+        return self._quorum_round(
+            lambda t: t.write_imm(src_dev, src_off, dst_off, n),
+            local_ack_vns)
+
+    def replicate_batch(self, src_dev: PMEMDevice,
+                        segs: Sequence[Tuple[int, int]],
+                        local_ack_vns: float = 0.0) -> float:
+        """Replicate+force a scatter list of (off, n) ranges in ONE quorum
+        round per backup (doorbell-batched write_imm): one wire round trip
+        and one W-th-ack wait cover every range."""
+        segs = list(segs)
+        return self._quorum_round(
+            lambda t: t.write_imm_batch(src_dev, segs), local_ack_vns)
 
     def broadcast_bytes(self, data: bytes, dst_off: int) -> float:
-        """Replicate a small DRAM buffer (superline updates, epoch bumps)."""
-        acks: List[float] = []
-        if self.local_is_durable:
-            acks.append(0.0)
-        for t in self.live_transports():
-            try:
-                acks.append(t.write_imm_bytes(data, dst_off))
-            except TransportError:
-                t.close()
-        if len(acks) < self.write_quorum:
-            raise QuorumError(
-                f"write quorum {self.write_quorum} not met "
-                f"({len(acks)}/{self.n_replicas} acks)")
-        acks.sort()
-        return acks[self.write_quorum - 1]
+        """Replicate a small DRAM buffer (superline updates, epoch bumps).
+        Fans out over the lanes in parallel and completes at the W-th ack,
+        like replicate."""
+        return self._quorum_round(
+            lambda t: t.write_imm_bytes(data, dst_off), 0.0)
 
     def shutdown(self) -> None:
-        if self._pool:
-            self._pool.shutdown(wait=False)
+        for lane in self._lanes.values():
+            lane.shutdown(wait=False, cancel_futures=True)

@@ -28,6 +28,58 @@ def tensor_checksum(x, use_pallas=None):
     return tensor_checksum_ref(x)
 
 
+def tensor_checksum_batch(mat, use_pallas=None):
+    """Batched integrity hash: uint32 lane matrix [n, L] -> uint32[n].
+
+    Rows are zero-padded to the common lane count L — trailing zero lanes
+    contribute nothing to the polynomial, so each row's value equals
+    tensor_checksum of its unpadded bytes.  The recovery scan validates
+    every FLAG_PHASH payload in one call here instead of one kernel
+    dispatch per record.
+
+    Off-TPU the blockwise evaluation runs directly in NumPy on the host
+    (uint32 multiply-add wraps mod 2^32, integer-identical to the jnp
+    oracle and the Pallas kernel — tests assert ==); on TPU rows route
+    through the Pallas kernel.
+    """
+    import numpy as np
+
+    mat = np.ascontiguousarray(mat, dtype=np.uint32)
+    if mat.ndim != 2:
+        raise ValueError(f"expected a [rows, lanes] matrix, got {mat.shape}")
+    rows, n = mat.shape
+    if rows == 0 or n == 0:
+        return np.zeros((rows,), np.uint32)
+    # The Pallas route is currently per-row (a vmapped batch kernel is
+    # future work), so it only makes sense on real TPU hardware or when
+    # explicitly requested — REPRO_USE_PALLAS=1 alone (CPU interpret
+    # emulation) must not turn the recovery scan's one batched call back
+    # into n_records interpreted dispatches.
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas or (use_pallas is None and on_tpu):
+        import jax.numpy as jnp
+        return jnp.stack([tensor_checksum_pallas(jnp.asarray(row),
+                                                 interpret=not on_tpu)
+                          for row in mat])
+    from .ref import _BLOCK, _R_BLOCK, powers
+    if n <= _BLOCK:
+        return (mat * powers(n)[None, :]).sum(axis=1, dtype=np.uint32)
+    pad = (-n) % _BLOCK
+    if pad:
+        mat = np.concatenate(
+            [mat, np.zeros((rows, pad), np.uint32)], axis=1)
+    nb = mat.shape[1] // _BLOCK
+    blocks = mat.reshape(rows, nb, _BLOCK)
+    partials = (blocks * powers(_BLOCK)[None, None, :]).sum(
+        axis=2, dtype=np.uint32)
+    facs = np.empty(nb, np.uint32)
+    acc = np.uint32(1)
+    for b in range(nb):
+        facs[b] = acc
+        acc = np.uint32((int(acc) * int(_R_BLOCK)) & 0xFFFFFFFF)
+    return (partials * facs[None, :]).sum(axis=1, dtype=np.uint32)
+
+
 def tree_checksums(tree, use_pallas=None):
     import jax.numpy as jnp
     leaves = jax.tree_util.tree_leaves(tree)

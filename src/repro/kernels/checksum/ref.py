@@ -98,6 +98,31 @@ def checksum_lanes(lanes: jax.Array) -> jax.Array:
     return jnp.sum(partials * facs, dtype=jnp.uint32)
 
 
+def checksum_lanes_2d(mat: jax.Array) -> jax.Array:
+    """Row-wise h() over a [rows, n] uint32 lane matrix -> uint32[rows].
+
+    Each row's value is identical to checksum_lanes(row) — zero-padded
+    tail lanes contribute nothing to the polynomial, so rows of unequal
+    logical length can share one padded matrix.  This is the oracle for
+    the batched validator the recovery scan uses on FLAG_PHASH records.
+    """
+    rows, n = mat.shape
+    if n == 0:
+        return jnp.zeros((rows,), jnp.uint32)
+    if n <= _BLOCK:
+        w = jnp.asarray(powers(n))
+        return jnp.sum(mat * w[None, :], axis=1, dtype=jnp.uint32)
+    pad = (-n) % _BLOCK
+    if pad:
+        mat = jnp.pad(mat, ((0, 0), (0, pad)))
+    nb = mat.shape[1] // _BLOCK
+    blocks = mat.reshape(rows, nb, _BLOCK)
+    w = jnp.asarray(powers(_BLOCK))
+    partials = jnp.sum(blocks * w[None, None, :], axis=2, dtype=jnp.uint32)
+    facs = device_powers(nb, base=int(_R_BLOCK))
+    return jnp.sum(partials * facs[None, :], axis=1, dtype=jnp.uint32)
+
+
 def tensor_checksum(x: jax.Array) -> jax.Array:
     """Integrity hash of one tensor (any shape/dtype) -> uint32 scalar."""
     return checksum_lanes(as_lanes(x))

@@ -52,6 +52,28 @@ def test_checksum_detects_torn_8byte_unit():
     assert int(tensor_checksum(jnp.asarray(y))) != base
 
 
+@pytest.mark.parametrize("lanes", [1, 7, 259, 4096, 5000])
+def test_checksum_batch_matches_per_row(lanes):
+    """The batched validator (recovery scan) must be integer-identical to
+    the per-tensor hash, including rows padded past their logical end
+    (trailing zero lanes contribute nothing to the polynomial)."""
+    from repro.kernels.checksum.ops import tensor_checksum_batch
+    from repro.kernels.checksum.ref import checksum_lanes_2d
+    rng = np.random.default_rng(lanes)
+    mat = rng.integers(0, 2 ** 32, size=(5, lanes), dtype=np.uint32)
+    mat[2, lanes // 2:] = 0                  # a zero-padded row
+    batch = np.asarray(tensor_checksum_batch(mat), np.uint32)
+    oracle = np.asarray(checksum_lanes_2d(jnp.asarray(mat)), np.uint32)
+    per_row = np.array([int(tensor_checksum(jnp.asarray(r))) for r in mat],
+                       np.uint32)
+    np.testing.assert_array_equal(batch, per_row)
+    np.testing.assert_array_equal(oracle, per_row)
+    # pallas route agrees too (interpret mode off-TPU)
+    pallas = np.asarray(tensor_checksum_batch(mat, use_pallas=True),
+                        np.uint32)
+    np.testing.assert_array_equal(pallas, per_row)
+
+
 # --------------------------- flash attention --------------------------- #
 
 @pytest.mark.parametrize("B,H,KV,S,D", [

@@ -48,7 +48,9 @@ def test_write_quorum_tolerates_backup_failure():
     rs.fail_backup("node1")
     rs.log.append(b"b")                              # still meets W=2
     assert rs.log.durable_lsn == 2
-    # failed transport evicted
+    # failed transport evicted once the straggler harvest has run (the
+    # W-th-ack fast path no longer waits for the failure in-line)
+    rs.group.drain()
     assert any(t.closed for t in rs.transports)
 
 
@@ -113,6 +115,34 @@ def test_quorum_recovery_primary_lost():
     relog = Log.open(img, LogConfig(capacity=CAP))
     assert [p for _, p in relog.iter_records()] == \
         [f"y{i}".encode() for i in range(10)]
+
+
+def test_repair_ships_only_differing_chunks():
+    """Regression for the §4.2 idempotence argument: a one-line divergence
+    must cost ~a chunk on the wire, not the whole golden image (the old
+    repair rewrote everything on a single differing byte)."""
+    rs = build_replica_set(mode="local+remote", capacity=CAP, n_backups=2,
+                           write_quorum=2)
+    for i in range(20):
+        rs.log.append(f"record-{i}".encode())
+    rs.group.drain()      # settle in-flight W-th-ack stragglers first
+    # diverge ONE cache line inside node2's ring
+    node2 = rs.servers[1].device
+    node2.write(ring_offset() + 256, b"\xff" * 64)
+    node2.persist(ring_offset() + 256, 64)
+    image_size = ring_offset() + CAP
+    img, report = quorum_recover(accessors_for(rs), rs.cfg, write_quorum=2,
+                                 local_name=rs.primary_id)
+    assert "node2" in report.repaired
+    assert 0 < report.repair_bytes["node2"] < image_size // 16, \
+        f"1-line divergence shipped {report.repair_bytes['node2']} bytes"
+    # an in-sync copy only receives the superline epoch bump
+    assert "node1" not in report.repaired
+    assert report.repair_bytes["node1"] <= ring_offset()
+    # and the repair actually took: node2 re-opens to the full history
+    relog = Log.open(node2, LogConfig(capacity=CAP))
+    assert [p for _, p in relog.iter_records()] == \
+        [f"record-{i}".encode() for i in range(20)]
 
 
 def test_read_quorum_not_met():
