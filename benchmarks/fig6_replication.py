@@ -9,7 +9,11 @@
 (e) straggler tolerance (PR 2) — with W < N the W-th-ack fast path
     returns as soon as the quorum fills: one slow backup must not bound
     replicate wall-clock (it catches up on its FIFO lane in the
-    background).
+    background);
+(f) pipelined force engine (PR 4) — wall-clock of a non-blocking
+    FreqPolicy append stream vs LogConfig.pipeline_depth under an
+    injected wire RTT: depth D overlaps D durability rounds on the wire,
+    so the stream stops being bounded by one RTT per force round.
 """
 
 from __future__ import annotations
@@ -18,7 +22,8 @@ import time
 
 import numpy as np
 
-from repro.core import (ORDERINGS, PMEMDevice, REP_LF, write_and_force)
+from repro.core import (FreqPolicy, ORDERINGS, PMEMDevice, REP_LF,
+                        write_and_force)
 from repro.core.replication import build_replica_set, device_size
 
 from .common import emit
@@ -103,10 +108,39 @@ def straggler_tolerance(quick: bool = False):
              f"mean_wall_ms={np.mean(walls) * 1e3:.2f}")
 
 
+def pipelined_force(quick: bool = False):
+    n = 48 if quick else 96
+    delay_s = 0.002 if quick else 0.004
+    payload = b"p" * 1024
+    for depth in (1, 2, 4, 8):
+        rs = build_replica_set(mode="local+remote", capacity=1 << 22,
+                               n_backups=2, write_quorum=2,
+                               pipeline_depth=depth)
+        pol = FreqPolicy(4, wait=False)
+        for _ in range(8):
+            rs.log.append(payload)                 # warm, undelayed
+        rs.log.drain()
+        for t in rs.transports:
+            t.inject(delay_s=delay_s)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            rid, ptr = rs.log.reserve(len(payload))
+            ptr[:] = payload
+            rs.log.complete(rid)
+            pol.on_complete(rs.log, rid)
+        pol.drain(rs.log)
+        wall = time.perf_counter() - t0
+        rs.group.drain()
+        rs.shutdown()
+        emit(f"fig6f/pipeline/depth{depth}", wall / n * 1e6,
+             f"wall_ms={wall * 1e3:.2f};rtt_ms={delay_s * 1e3:.0f}")
+
+
 def run(quick: bool = False):
     flush_ordering(quick)
     backup_scaling(quick)
     straggler_tolerance(quick)
+    pipelined_force(quick)
 
 
 if __name__ == "__main__":

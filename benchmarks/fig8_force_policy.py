@@ -7,17 +7,23 @@
 (c/d) vulnerability-window distribution for freq-8/freq-16 — skewed far
     below the F×T theoretical bound;
 (e) batch axis: policies driven through on_complete_batch — one policy
-    decision (and at most one force) per batch instead of per record.
+    decision (and at most one force) per batch instead of per record;
+(f) handoff axis (PR 4): replicated freq policy with the blocking
+    (wait=True) vs non-blocking (wait=False) leader handoff — the
+    non-blocking leader issues its durability round into the force
+    pipeline and returns, so the writer stream is no longer stalled for
+    one wire RTT at every leader LSN.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 
 import numpy as np
 
 from repro.core import Log, LogConfig, PMEMDevice, make_policy
-from repro.core.replication import device_size
+from repro.core.replication import build_replica_set, device_size
 
 from .common import emit, emit_json, threaded_ops_per_s
 
@@ -111,10 +117,41 @@ def window_distribution(quick: bool = False):
         assert w.max() <= bound, "F×T bound violated!"
 
 
+def handoff(quick: bool = False):
+    """Blocking vs non-blocking force-leader handoff on a replicated log
+    (one injected-RTT wire, pipeline depth 4)."""
+    n = 64 if quick else 128
+    delay_s = 0.002
+    payload = b"h" * 256
+    for wait in (True, False):
+        rs = build_replica_set(mode="local+remote", capacity=1 << 22,
+                               n_backups=1, write_quorum=2,
+                               pipeline_depth=4)
+        pol = make_policy("freq", freq=8, wait=wait)
+        for _ in range(8):
+            rs.log.append(payload)
+        rs.log.drain()
+        rs.transports[0].inject(delay_s=delay_s)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            rid, ptr = rs.log.reserve(len(payload))
+            ptr[:] = payload
+            rs.log.complete(rid)
+            pol.on_complete(rs.log, rid)
+        pol.drain(rs.log)
+        wall = time.perf_counter() - t0
+        rs.group.drain()
+        rs.shutdown()
+        tag = "blocking" if wait else "handoff"
+        emit(f"fig8f/handoff/{tag}", wall / n * 1e6,
+             f"wall_ms={wall * 1e3:.2f}")
+
+
 def run(quick: bool = False):
     throughput(quick)
     batch_throughput(quick)
     window_distribution(quick)
+    handoff(quick)
 
 
 if __name__ == "__main__":

@@ -79,6 +79,11 @@ class DurableKV:
             return len(self._table)
 
     def flush(self) -> None:
+        """Force everything accepted so far and wait for the log's
+        pipelined force engine to empty: on return every put is durable
+        on a write quorum, or the round failure (QuorumError — including
+        one deferred by a non-blocking ``wait=False`` policy) has been
+        raised here."""
         self.policy.drain(self.log)
 
     @classmethod

@@ -14,15 +14,16 @@ Public surface:
 """
 
 from .pmem import CACHE_LINE, ATOM, CostModel, DeviceStats, PMEMDevice
-from .primitives import (AtomicRegion, IntegrityRegion, LF_REP, ORDERINGS,
-                         PARALLEL, REP_LF, persist, write_and_force,
-                         write_and_force_segs)
+from .primitives import (AtomicRegion, ForceRound, IntegrityRegion, LF_REP,
+                         ORDERINGS, PARALLEL, REP_LF, persist,
+                         write_and_force, write_and_force_segs,
+                         write_and_force_segs_async)
 from .log import (Batch, CorruptLogError, Log, LogConfig, LogError,
                   LogFullError, Superline)
 from .force_policy import (ForcePolicy, FreqPolicy, GroupCommitPolicy,
                            SyncPolicy, make_policy)
-from .transport import (QuorumError, ReplicaServer, ReplicationGroup,
-                        Transport, TransportError)
+from .transport import (QuorumError, QuorumRound, ReplicaServer,
+                        ReplicationGroup, Transport, TransportError)
 from .replication import ReplicaSet, build_replica_set, device_size
 from .recovery import CopyAccessor, RecoveryError, RecoveryReport, \
     quorum_recover
@@ -30,14 +31,15 @@ from .cluster import ClusterManager, Node
 
 __all__ = [
     "CACHE_LINE", "ATOM", "CostModel", "DeviceStats", "PMEMDevice",
-    "AtomicRegion", "IntegrityRegion", "LF_REP", "ORDERINGS", "PARALLEL",
-    "REP_LF", "persist", "write_and_force", "write_and_force_segs",
+    "AtomicRegion", "ForceRound", "IntegrityRegion", "LF_REP", "ORDERINGS",
+    "PARALLEL", "REP_LF", "persist", "write_and_force",
+    "write_and_force_segs", "write_and_force_segs_async",
     "Batch", "CorruptLogError", "Log", "LogConfig", "LogError",
     "LogFullError", "Superline",
     "ForcePolicy", "FreqPolicy", "GroupCommitPolicy", "SyncPolicy",
     "make_policy",
-    "QuorumError", "ReplicaServer", "ReplicationGroup", "Transport",
-    "TransportError",
+    "QuorumError", "QuorumRound", "ReplicaServer", "ReplicationGroup",
+    "Transport", "TransportError",
     "ReplicaSet", "build_replica_set", "device_size",
     "CopyAccessor", "RecoveryError", "RecoveryReport", "quorum_recover",
     "ClusterManager", "Node",

@@ -30,13 +30,41 @@ class Node:
 class ClusterManager:
     """Membership + leader election + fencing for one Arcadia log."""
 
-    def __init__(self, nodes: List[Node]):
+    def __init__(self, nodes: List[Node], drain_timeout: float = 5.0):
         if not nodes:
             raise ValueError("cluster needs at least one node")
         self._lock = threading.Lock()
         self.nodes: Dict[str, Node] = {n.node_id: n for n in nodes}
         self._primary = self._elect_locked()
         self._callbacks: List[Callable[[str, str], None]] = []
+        self._logs: List = []             # logs whose pipelines we drain
+        self.drain_timeout = drain_timeout
+
+    # -- force-pipeline fencing --------------------------------------------- #
+    def attach_log(self, log) -> None:
+        """Register a log whose pipelined force engine must settle before
+        any failover re-wiring: in-flight durability rounds either retire
+        or fail *before* the surviving backups fence the old primary, so
+        no doorbell posted under the old epoch can straddle the epoch
+        change (§4.2 Handling Primary Failure + DESIGN.md §8)."""
+        self._logs.append(log)
+
+    def detach_log(self, log) -> None:
+        if log in self._logs:
+            self._logs.remove(log)
+
+    def _drain_logs(self) -> None:
+        for log in self._logs:
+            try:
+                # surface_errors=False: settle the pipeline but leave any
+                # deferred round failure stashed — it must still raise on
+                # the log's next force/drain, not vanish into failover
+                log.drain(timeout=self.drain_timeout, surface_errors=False)
+            except Exception:
+                # drain timeout: failover proceeds regardless (the
+                # pipeline may be stuck precisely because the primary
+                # died); nothing was consumed
+                pass
 
     # -- queries ----------------------------------------------------------- #
     @property
@@ -57,9 +85,14 @@ class ClusterManager:
 
     def report_failure(self, node_id: str) -> Optional[str]:
         """Liveness detector verdict: ``node_id`` is dead.  If it was the
-        primary: fence it on every surviving server, elect a successor,
-        and fire callbacks (app migration + log recovery hook).
-        Returns the new primary id if a failover happened."""
+        primary: drain attached force pipelines, fence the old primary on
+        every surviving server, elect a successor, and fire callbacks
+        (app migration + log recovery hook).  Returns the new primary id
+        if a failover happened."""
+        if node_id == self.primary:
+            # settle in-flight durability rounds before the epoch fence
+            # goes up (outside _lock: drain only touches log internals)
+            self._drain_logs()
         with self._lock:
             node = self.nodes.get(node_id)
             if node is None or not node.alive:

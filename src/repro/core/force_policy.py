@@ -18,6 +18,15 @@ All policies expose ``on_complete(log, rec_id)`` called after
 ``log.complete_batch(batch)`` (one policy decision — and at most one
 force — for the whole batch), and ``drain(log)`` to force everything at
 the end of a run.
+
+Every policy takes ``wait`` (default True).  With ``wait=False`` a force
+leader only *issues* its durability round into the log's pipelined force
+engine (DESIGN.md §8) and hands back immediately — the non-blocking
+leader handoff: the round retires in the background when its quorum
+fills, up to ``LogConfig.pipeline_depth`` rounds overlap on the wire,
+and any round failure surfaces on the next force or on ``drain``.
+``drain`` always blocks: it forces the last reserved LSN, waits for the
+pipeline to empty, and surfaces deferred round errors.
 """
 
 from __future__ import annotations
@@ -31,6 +40,9 @@ from .log import Log
 class ForcePolicy:
     name = "base"
 
+    def __init__(self, wait: bool = True):
+        self.wait = bool(wait)
+
     def on_complete(self, log: Log, rec_id: int) -> None:
         raise NotImplementedError
 
@@ -41,9 +53,12 @@ class ForcePolicy:
             self.on_complete(log, lsn)
 
     def drain(self, log: Log) -> None:
+        """Force everything reserved so far, wait for every in-flight
+        durability round to retire, and surface deferred round errors."""
         last = log.next_lsn - 1
         if last >= 1 and log.durable_lsn < last:
             log.force(last, freq=1)
+        log.drain()
 
     def vulnerability_bound(self, log: Log) -> Optional[int]:
         return None
@@ -53,16 +68,22 @@ class SyncPolicy(ForcePolicy):
     name = "sync"
 
     def on_complete(self, log: Log, rec_id: int) -> None:
-        log.force(rec_id, freq=1)
+        log.force(rec_id, freq=1, wait=self.wait)
 
     def on_complete_batch(self, log: Log, lsns: List[int]) -> None:
         # forcing the last LSN covers the whole batch in one coalesced
         # persist+replicate round (in-order commit has no holes)
         if lsns:
-            log.force(lsns[-1], freq=1)
+            log.force(lsns[-1], freq=1, wait=self.wait)
 
     def vulnerability_bound(self, log: Log) -> Optional[int]:
-        return 0
+        # with the non-blocking handoff, issued-but-unretired rounds sit
+        # in the window (one per pipeline slot, each covering at most one
+        # record per completing thread), plus completed records whose
+        # issuing thread is blocked on a full pipeline
+        if self.wait and log.cfg.pipeline_depth == 1:
+            return 0
+        return log.cfg.pipeline_depth + log.cfg.max_threads
 
 
 class GroupCommitPolicy(ForcePolicy):
@@ -74,7 +95,8 @@ class GroupCommitPolicy(ForcePolicy):
 
     name = "group"
 
-    def __init__(self, group_size: int):
+    def __init__(self, group_size: int, wait: bool = True):
+        super().__init__(wait)
         self.group_size = int(group_size)
         self._lock = threading.Lock()
         self._count = 0
@@ -87,7 +109,7 @@ class GroupCommitPolicy(ForcePolicy):
                 self._count = 0
                 lead = True
         if lead:
-            log.force(rec_id, freq=1)
+            log.force(rec_id, freq=1, wait=self.wait)
 
     def on_complete_batch(self, log: Log, lsns: List[int]) -> None:
         if not lsns:
@@ -102,11 +124,17 @@ class GroupCommitPolicy(ForcePolicy):
                 self._count %= self.group_size
                 lead = True
         if lead:
-            log.force(lsns[-1], freq=1)
+            log.force(lsns[-1], freq=1, wait=self.wait)
 
     def vulnerability_bound(self, log: Log) -> Optional[int]:
-        # window size + records racing in while the leader forces
-        return self.group_size + log.cfg.max_threads
+        # window size + records racing in while the leader forces; with
+        # pipelining (or non-blocking handoff) up to pipeline_depth
+        # issued-but-unretired rounds extend the window, each covering
+        # at most one such span
+        base = self.group_size + log.cfg.max_threads
+        if self.wait and log.cfg.pipeline_depth == 1:
+            return base
+        return base * (log.cfg.pipeline_depth + 1)
 
 
 class FreqPolicy(ForcePolicy):
@@ -115,29 +143,37 @@ class FreqPolicy(ForcePolicy):
 
     name = "freq"
 
-    def __init__(self, freq: int):
+    def __init__(self, freq: int, wait: bool = True):
+        super().__init__(wait)
         self.freq = int(freq)
 
     def on_complete(self, log: Log, rec_id: int) -> None:
-        log.force(rec_id, freq=self.freq)
+        log.force(rec_id, freq=self.freq, wait=self.wait)
 
     def on_complete_batch(self, log: Log, lsns: List[int]) -> None:
         # the largest leader LSN in the batch covers every force the
         # scalar loop would have issued (in-order commit)
         leaders = [l for l in lsns if l % self.freq == 0]
         if leaders:
-            log.force(leaders[-1], freq=self.freq)
+            log.force(leaders[-1], freq=self.freq, wait=self.wait)
 
     def vulnerability_bound(self, log: Log) -> Optional[int]:
-        return self.freq * log.cfg.max_threads   # F × T (§4.4)
+        """F × T (§4.4) for the serial blocking engine; with pipelining
+        or the non-blocking handoff, up to ``pipeline_depth``
+        issued-but-unretired rounds — each covering at most an F×T span
+        — extend the worst case to (depth + 1) × F × T."""
+        base = self.freq * log.cfg.max_threads
+        if self.wait and log.cfg.pipeline_depth == 1:
+            return base
+        return base * (log.cfg.pipeline_depth + 1)
 
 
-def make_policy(name: str, *, freq: int = 8, group_size: int = 128
-                ) -> ForcePolicy:
+def make_policy(name: str, *, freq: int = 8, group_size: int = 128,
+                wait: bool = True) -> ForcePolicy:
     if name == "sync":
-        return SyncPolicy()
+        return SyncPolicy(wait=wait)
     if name == "group":
-        return GroupCommitPolicy(group_size)
+        return GroupCommitPolicy(group_size, wait=wait)
     if name == "freq":
-        return FreqPolicy(freq)
+        return FreqPolicy(freq, wait=wait)
     raise ValueError(f"unknown force policy {name!r}")

@@ -10,9 +10,13 @@ path is split into four stages (Table 2) so that only the stages that
   complete  — concurrent: computes the payload CRC, publishes the record
               header (valid flag), advances the contiguous-complete
               watermark.
-  force     — serialized per batch: waits for all records up to the
-              target LSN to be complete, then persists + replicates the
-              byte range *in order* (no holes in the committed prefix).
+  force     — pipelined (DESIGN.md §8): waits for all records up to the
+              target LSN to be complete, then *issues* a durability round
+              (doorbell post + overlapped local flush) for the un-issued
+              byte range.  Up to LogConfig.pipeline_depth rounds may be
+              in flight; rounds retire strictly in LSN order, so the
+              durable watermark advances over a gapless prefix only (no
+              holes in the committed prefix).
 
 Layout (Fig. 3):
 
@@ -39,15 +43,17 @@ from __future__ import annotations
 
 import struct
 import threading
+import time
 import zlib
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Deque, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from .pmem import PMEMDevice
-from .primitives import (AtomicRegion, REP_LF, write_and_force,
-                         write_and_force_segs)
+from .primitives import (AtomicRegion, ForceRound, REP_LF, write_and_force,
+                         write_and_force_segs_async)
 from .transport import QuorumError, ReplicationGroup
 
 crc32 = zlib.crc32
@@ -164,6 +170,32 @@ def _rec_checksum(lsn: int, size: int, payload, phash: bool) -> int:
 RESERVED, COMPLETED, FORCED = 0, 1, 2
 
 
+def _remaining(deadline: Optional[float]) -> Optional[float]:
+    if deadline is None:
+        return None
+    return max(0.0, deadline - time.monotonic())
+
+
+@dataclass(slots=True)
+class _PipeRound:
+    """One in-flight durability round of the pipelined force engine.
+
+    ``end_off`` is the raw (un-wrapped) ring-relative end of the round's
+    byte range; the durable offset it retires to is ``end_off % cap``.
+    ``error`` is set when the round (or an earlier one — in-order commit
+    cannot skip a hole) failed; ``waiters`` counts threads blocked on
+    this round so a failure with no waiter is deferred to the next
+    force/drain instead of being dropped.
+    """
+
+    end_lsn: int
+    start_off: int
+    end_off: int
+    handle: Optional[ForceRound] = None
+    error: Optional[BaseException] = None
+    waiters: int = 0
+
+
 @dataclass(slots=True)
 class _Rec:
     lsn: int
@@ -271,6 +303,10 @@ class LogConfig:
     # payloads >= this many bytes are integrity-hashed with the blockwise
     # polynomial hash (Pallas kernel on TPU) instead of CRC32; None = never
     phash_threshold: Optional[int] = 1 << 20
+    # max in-flight durability rounds (DESIGN.md §8): 1 = the serial force
+    # of the paper's Table 2, >= 2 overlaps wire time across rounds while
+    # the durable watermark still retires strictly in LSN order
+    pipeline_depth: int = 1
 
 
 @dataclass
@@ -323,6 +359,8 @@ class Log:
             raise ValueError("ring capacity must be 8-byte aligned and >= 64")
         if cfg.capacity + self.ring_off > dev.size:
             raise ValueError("device too small for configured capacity")
+        if cfg.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
         self._super = superline_region(dev, repl, cfg.ordering)
 
         self._alloc_lock = threading.Lock()
@@ -335,8 +373,16 @@ class Log:
         self._used = 0                # live bytes in ring
         self._complete_upto = 0       # all lsn <= this are COMPLETED
         self._durable_lsn = 0         # all lsn <= this are durable (in order)
-        self._durable_off = 0         # ring-relative first un-forced byte
-        self._force_busy = False
+        self._durable_off = 0         # ring-relative first un-retired byte
+        # pipelined force engine (DESIGN.md §8): doorbell posts are
+        # serialized under _issue_lock so rounds hit every FIFO lane in
+        # LSN order; _inflight holds issued-not-yet-retired rounds and
+        # retirement advances the durable watermark head-first only.
+        self._issue_lock = threading.Lock()
+        self._inflight: Deque[_PipeRound] = deque()
+        self._issue_lsn = 0           # all lsn <= this are covered by a round
+        self._issue_off = 0           # ring-relative first un-issued byte
+        self._pipe_errors: List[BaseException] = []
         self._epoch = 1
         self._head_lsn = 1
         self._head_off = 0
@@ -428,8 +474,13 @@ class Log:
             self._recs[lsn] = rec
             self._tail_off = off + extent
             self._used += need
-            # header published now with flags=0 (not yet valid)
-            self._write_header(off, lsn, size, 0, 0)
+            # No header is published here: complete() writes the full
+            # header (lsn, size, crc, flags) in one device write.  The
+            # provisional flags=0 header the pre-PR4 path wrote was
+            # crash-equivalent to stale ring bytes — it was itself
+            # unflushed, so a crash could drop it and recovery already
+            # rejects whatever lies there (LSN mismatch, or the seeded
+            # payload checksum) — and complete() rewrote every field.
         return lsn, self.dev.view(rec.off + REC_HDR_SIZE, size)
 
     def _write_header(self, ring_off: int, lsn: int, size: int, crc: int,
@@ -496,9 +547,16 @@ class Log:
             self._complete_upto = upto
             self._commit_cv.notify_all()
 
-    # -- force ----------------------------------------------------------- #
+    # -- force: the pipelined force engine (DESIGN.md §8) ----------------- #
+    @property
+    def _force_busy(self) -> bool:
+        """True when no further round can be issued right now (pipeline
+        full).  Kept for introspection; the pre-PR4 serial engine exposed
+        the same flag for its single critical section."""
+        return len(self._inflight) >= self.cfg.pipeline_depth
+
     def force(self, rec_id: int, freq: int = 1,
-              timeout: Optional[float] = None) -> int:
+              timeout: Optional[float] = None, wait: bool = True) -> int:
         """Make records durable in order.
 
         With ``freq`` F > 1, only a call whose LSN ≡ 0 (mod F) forces; it
@@ -506,65 +564,222 @@ class Log:
         LSN (§4.4).  Other calls return immediately (their durability is
         covered by a later leader — bounded by the F×T window).
 
+        A leader *issues* a durability round: it claims the un-issued ring
+        range up to its LSN, posts the replication doorbell, and runs the
+        local flush overlapped with wire time.  Up to
+        ``LogConfig.pipeline_depth`` rounds may be in flight at once;
+        rounds retire strictly in LSN order, so ``durable_lsn`` only ever
+        advances over a gapless prefix.  With ``wait=False`` the leader
+        returns right after issuing (non-blocking handoff): the round
+        retires in the background when its quorum fills, and a failure
+        with no covering waiter surfaces on the next force or ``drain``.
+
         Returns the durable LSN watermark at return time.  Raises
-        QuorumError if replication cannot meet W.
+        QuorumError if replication cannot meet W (a quorum failure in
+        round N also fails every issued round > N — the hole can never be
+        skipped — and propagates to every waiter those rounds cover).
         """
         lsn = rec_id
         if freq > 1 and lsn % freq != 0:
             with self._commit_cv:
                 return self._durable_lsn
+        deadline = None if timeout is None else time.monotonic() + timeout
         with self._commit_cv:
             # total order: wait for every earlier record to be complete
             ok = self._commit_cv.wait_for(
-                lambda: self._complete_upto >= lsn, timeout=timeout)
+                lambda: self._complete_upto >= lsn,
+                timeout=_remaining(deadline))
             if not ok:
                 raise LogError(f"force({lsn}) timed out waiting for "
                                f"complete_upto={self._complete_upto}")
-            # in-order commit: one force at a time; earlier leader may have
-            # already covered us
-            ok = self._commit_cv.wait_for(
-                lambda: self._durable_lsn >= lsn or not self._force_busy,
-                timeout=timeout)
-            if not ok:
-                raise LogError(f"force({lsn}) timed out on earlier force")
-            if self._durable_lsn >= lsn:
-                return self._durable_lsn
-            self._force_busy = True
-            start_off = self._durable_off
-            end_rec = self._recs[lsn]
-            end_off = (end_rec.off - self.ring_off) + end_rec.extent
-        try:
-            vns = self._persist_range(start_off, end_off)
-        except Exception:
+        entry = self._pipe_issue(lsn, deadline)
+        if not wait:
             with self._commit_cv:
-                self._force_busy = False
-                self._commit_cv.notify_all()
-            raise
-        with self._commit_cv:
-            self._durable_lsn = max(self._durable_lsn, lsn)
-            self._durable_off = end_off % self.cfg.capacity
-            self._force_busy = False
-            self.force_vns_total += vns
-            self._commit_cv.notify_all()
-            return self._durable_lsn
+                return self._durable_lsn
+        return self._pipe_await(lsn, entry, deadline)
 
-    def _persist_range(self, start: int, end: int) -> float:
-        """Persist+replicate ring-relative [start, end), handling wrap.
-
-        Both wrap segments ride ONE replication round (a doorbell-batched
-        write_imm): one wire round trip and one quorum wait cover the
-        whole range, instead of a full write_and_force per segment."""
+    def _range_segs(self, start: int, end: int) -> List[Tuple[int, int]]:
+        """Absolute (off, n) scatter list for ring-relative [start, end);
+        a wrapped range yields two segments riding ONE doorbell-batched
+        replication round."""
         if end == start:
-            return 0.0
-        segs: List[Tuple[int, int]]
+            return []
         if end > start:
             segs = [(start, end - start)]
         else:
             segs = [(start, self.cfg.capacity - start), (0, end)]
-        segs = [(self._abs(off), n) for off, n in segs if n > 0]
-        return write_and_force_segs(self.dev, segs, self.repl,
-                                    self.cfg.ordering,
-                                    local_durable=self.cfg.local_durable)
+        return [(self._abs(off), n) for off, n in segs if n > 0]
+
+    def _covering_round_locked(self, lsn: int) -> Optional[_PipeRound]:
+        for e in self._inflight:
+            if e.end_lsn >= lsn:
+                return e
+        return None
+
+    def _pipe_issue(self, lsn: int, deadline: Optional[float]
+                    ) -> Optional[_PipeRound]:
+        """Become the issue leader for ``lsn`` unless it is already
+        covered: claim the un-issued ring range, post the replication
+        doorbell and run the overlapped local flush.  Posts are
+        serialized under ``_issue_lock`` so rounds reach every FIFO lane
+        in LSN order.  Returns the in-flight round covering ``lsn``
+        (None when already durable)."""
+        with self._commit_cv:
+            # fast path: an already-durable or already-covered LSN must
+            # not queue behind _issue_lock (a slot-waiting leader can
+            # hold it for a full wire round)
+            if self._durable_lsn >= lsn:
+                return None
+            if self._issue_lsn >= lsn:
+                return self._covering_round_locked(lsn)
+        with self._issue_lock:
+            with self._commit_cv:
+                if self._durable_lsn >= lsn:
+                    return None
+                if self._issue_lsn >= lsn:
+                    return self._covering_round_locked(lsn)
+                self._raise_pipe_deferred_locked()
+                ok = self._commit_cv.wait_for(
+                    lambda: len(self._inflight) < self.cfg.pipeline_depth
+                    or self._durable_lsn >= lsn or self._issue_lsn >= lsn,
+                    timeout=_remaining(deadline))
+                if not ok:
+                    raise LogError(
+                        f"force({lsn}) timed out waiting for a pipeline "
+                        f"slot (depth={self.cfg.pipeline_depth})")
+                if self._durable_lsn >= lsn:
+                    return None
+                if self._issue_lsn >= lsn:
+                    return self._covering_round_locked(lsn)
+                start_off = self._issue_off
+                rec = self._recs[lsn]
+                end_off = (rec.off - self.ring_off) + rec.extent
+                entry = _PipeRound(lsn, start_off, end_off)
+                self._inflight.append(entry)
+                self._issue_lsn = lsn
+                self._issue_off = end_off % self.cfg.capacity
+            try:
+                handle = write_and_force_segs_async(
+                    self.dev, self._range_segs(start_off, end_off),
+                    self.repl, self.cfg.ordering,
+                    local_durable=self.cfg.local_durable)
+            except BaseException as exc:
+                with self._commit_cv:
+                    # surfaced=True: the issuing leader raises it itself
+                    self._pipe_fail_locked(entry, exc, surfaced=True)
+                raise
+            with self._commit_cv:
+                entry.handle = handle
+        handle.add_done_callback(self._pipe_pump)
+        return entry
+
+    def _pipe_pump(self) -> None:
+        """Retire settled rounds strictly head-first: the durable
+        watermark only ever advances over a gapless prefix.  Runs on
+        whatever thread settles a round's quorum (a lane worker, or the
+        issuing thread inline when the round needed no wire work); a
+        failed head round fails every later round."""
+        with self._commit_cv:
+            while self._inflight:
+                entry = self._inflight[0]
+                if entry.handle is None or not entry.handle.done():
+                    break
+                try:
+                    vns = entry.handle.wait(timeout=0)
+                except BaseException as exc:
+                    self._pipe_fail_locked(entry, exc)
+                    break
+                self._inflight.popleft()
+                self._durable_lsn = entry.end_lsn
+                self._durable_off = entry.end_off % self.cfg.capacity
+                self.force_vns_total += vns
+            self._commit_cv.notify_all()
+
+    def _pipe_fail_locked(self, entry: _PipeRound, exc: BaseException,
+                          surfaced: bool = False) -> None:
+        """Fail ``entry`` and every round issued after it (in-order
+        retirement cannot skip a hole), roll the issue watermark back to
+        the last surviving round so later forces re-issue the failed
+        range afresh, and wake every waiter.  ``surfaced`` means the
+        caller raises ``exc`` itself, so it must not also be deferred.
+        Caller holds _commit_cv."""
+        try:
+            idx = self._inflight.index(entry)
+        except ValueError:
+            return
+        failed: List[_PipeRound] = []
+        while len(self._inflight) > idx:
+            failed.append(self._inflight.pop())
+        for e in failed:
+            e.error = exc
+        prev = self._inflight[-1] if self._inflight else None
+        self._issue_lsn = prev.end_lsn if prev else self._durable_lsn
+        self._issue_off = (prev.end_off % self.cfg.capacity) if prev \
+            else self._durable_off
+        if not surfaced and all(e.waiters == 0 for e in failed):
+            # nobody is covering these rounds: defer so the error still
+            # surfaces (next force issue, or drain)
+            self._pipe_errors.append(exc)
+        self._commit_cv.notify_all()
+
+    def _raise_pipe_deferred_locked(self) -> None:
+        if self._pipe_errors:
+            raise self._pipe_errors.pop(0)
+
+    def _pipe_await(self, lsn: int, entry: Optional[_PipeRound],
+                    deadline: Optional[float]) -> int:
+        """Block until ``lsn`` is durable (its covering round — and every
+        earlier one — retired) or its covering round failed."""
+        with self._commit_cv:
+            if entry is not None:
+                entry.waiters += 1
+            try:
+                ok = self._commit_cv.wait_for(
+                    lambda: self._durable_lsn >= lsn
+                    or (entry is not None and entry.error is not None),
+                    timeout=_remaining(deadline))
+            finally:
+                if entry is not None:
+                    entry.waiters -= 1
+            if self._durable_lsn >= lsn:
+                return self._durable_lsn
+            if entry is not None and entry.error is not None:
+                # this waiter surfaces the failure: drop any deferred
+                # copy stashed before the waiter registered (race)
+                try:
+                    self._pipe_errors.remove(entry.error)
+                except ValueError:
+                    pass
+                raise entry.error
+            if not ok:
+                raise LogError(f"force({lsn}) timed out waiting for round "
+                               f"{entry.end_lsn if entry else lsn} to "
+                               f"retire")
+            return self._durable_lsn
+
+    def drain(self, timeout: Optional[float] = None,
+              surface_errors: bool = True) -> None:
+        """Wait until every issued durability round has retired, then
+        surface any deferred pipeline error (a ``wait=False`` round that
+        failed with no covering waiter) and any straggler-lane error the
+        replication group harvested.  Does not issue new rounds:
+        completed-but-unforced records stay in the vulnerability window
+        (use a force policy's ``drain`` to force them first).
+
+        With ``surface_errors=False`` only the wait happens — deferred
+        errors stay stashed for the next force/drain.  Failover uses
+        this (ClusterManager._drain_logs) so settling the pipeline
+        before the epoch fence cannot destroy a failure signal."""
+        with self._commit_cv:
+            ok = self._commit_cv.wait_for(lambda: not self._inflight,
+                                          timeout=timeout)
+            if not ok:
+                raise LogError("drain timed out with durability rounds "
+                               "still in flight")
+            if surface_errors:
+                self._raise_pipe_deferred_locked()
+        if self.repl is not None:
+            self.repl.drain(timeout=timeout, surface_errors=surface_errors)
 
     def append(self, data: bytes, freq: int = 1) -> int:
         """Convenience bundle of reserve+copy+complete+force (Table 2)."""
@@ -721,22 +936,24 @@ class Log:
         return vns
 
     def force_batch(self, batch: Batch, freq: int = 1,
-                    timeout: Optional[float] = None) -> int:
+                    timeout: Optional[float] = None,
+                    wait: bool = True) -> int:
         """Force the batch per the frequency policy: the largest batch LSN
         that is ≡ 0 (mod freq) leads for everything up to itself (exactly
         the forces the scalar loop would have issued).  The force itself
-        hands _persist_range one coalesced byte range — one flush+fence
-        (two across a wrap) for the whole batch."""
+        issues one coalesced byte range — one flush+fence (two across a
+        wrap) and one replication round for the whole batch."""
         if not batch.lsns:
             with self._commit_cv:
                 return self._durable_lsn
         if freq <= 1:
-            return self.force(batch.lsns[-1], freq=1, timeout=timeout)
+            return self.force(batch.lsns[-1], freq=1, timeout=timeout,
+                              wait=wait)
         leaders = [l for l in batch.lsns if l % freq == 0]
         if not leaders:
             with self._commit_cv:
                 return self._durable_lsn
-        return self.force(leaders[-1], freq=freq, timeout=timeout)
+        return self.force(leaders[-1], freq=freq, timeout=timeout, wait=wait)
 
     def append_batch(self, payloads: List[bytes], freq: int = 1) -> List[int]:
         """Batched reserve+copy+complete+force: the Table-2 pipeline with
@@ -831,6 +1048,10 @@ class Log:
             self._used = 0
             self._complete_upto = self._durable_lsn = self._next_lsn - 1
             self._durable_off = 0
+            self._inflight.clear()
+            self._pipe_errors.clear()
+            self._issue_lsn = self._durable_lsn
+            self._issue_off = 0
             return self._write_superline()
 
     # ------------------------------------------------------------------ #
@@ -1045,6 +1266,8 @@ class Log:
         self._used = used
         self._complete_upto = self._durable_lsn = next_lsn - 1
         self._durable_off = tail
+        self._issue_lsn = self._durable_lsn
+        self._issue_off = tail
 
     def iter_records(self) -> Iterator[Tuple[int, bytes]]:
         """Recovery iterator: yields (lsn, payload) for every live record
@@ -1062,6 +1285,11 @@ class Log:
         unpack_from = _REC_HDR.unpack_from
         for lsn, rec in items:
             if rec.pad:
+                continue
+            if rec.state < COMPLETED:
+                # reserved but not yet completed: its header has not been
+                # written (PR 4 removed the provisional flags=0 header),
+                # so the ring holds stale bytes there — skip by state
                 continue
             roff = rec.off - self.ring_off
             _, size, crc, flags = unpack_from(raw, roff)
@@ -1086,4 +1314,6 @@ class Log:
             return dict(next_lsn=self._next_lsn, head_lsn=self._head_lsn,
                         durable_lsn=self._durable_lsn,
                         complete_upto=self._complete_upto, used=self._used,
-                        epoch=self._epoch, capacity=self.cfg.capacity)
+                        epoch=self._epoch, capacity=self.cfg.capacity,
+                        inflight_rounds=len(self._inflight),
+                        issue_lsn=self._issue_lsn)

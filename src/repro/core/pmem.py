@@ -72,6 +72,7 @@ class CostModel:
     rdma_byte_ns: float = 0.085       # ~ 11.7 GB/s effective wire bandwidth
     llc_miss_ns: float = 80.0         # NIC DMA read that misses LLC (per line)
     crc_byte_ns: float = 0.25         # crc32 software cost (accounted, not spun)
+    doorbell_ns: float = 150.0        # WQE post + doorbell ring (issue gap)
 
 
 @dataclass

@@ -23,7 +23,7 @@ from dataclasses import dataclass
 from typing import Callable, Optional, Tuple
 
 from .pmem import CostModel, PMEMDevice
-from .transport import QuorumError, ReplicationGroup
+from .transport import QuorumError, QuorumRound, ReplicationGroup
 
 crc32 = zlib.crc32
 
@@ -137,6 +137,93 @@ def write_and_force_segs(
         loc_vns = _persist_all()
         rep_vns = repl.replicate_batch(dev, segs, local_ack_vns=loc_vns)
         return loc_vns + rep_vns + 0.1 * min(loc_vns, rep_vns)
+    raise ValueError(f"unknown ordering {ordering!r}")
+
+
+@dataclass
+class ForceRound:
+    """Handle for one issued ``write_and_force_segs_async`` round.
+
+    ``wait()`` blocks until the round's write quorum settles and returns
+    the round's modelled cost.  Cost model (DESIGN.md §8): with REP_LF the
+    local flush overlaps wire time — the source ranges were DMA-snapshotted
+    at post time, so flushing no longer costs the NIC its LLC hits — and an
+    overlapped round pays ``max(wire, flush) + doorbell`` instead of the
+    serial sum.  LF_REP and PARALLEL keep their serial accounting (their
+    flush either orders before the wire or contends with it).
+    """
+
+    round: Optional[QuorumRound]       # None => no wire work was needed
+    loc_vns: float = 0.0
+    issue_vns: float = 0.0
+    ordering: str = REP_LF
+
+    def done(self) -> bool:
+        return self.round is None or self.round.done()
+
+    def add_done_callback(self, fn) -> None:
+        if self.round is None:
+            fn()
+        else:
+            self.round.add_done_callback(fn)
+
+    def wait(self, timeout: Optional[float] = None) -> float:
+        if self.round is None:
+            return self.loc_vns
+        rep_vns = self.round.result(timeout)
+        if self.ordering == REP_LF:
+            return max(rep_vns, self.loc_vns) + self.issue_vns
+        if self.ordering == LF_REP:
+            return self.loc_vns + rep_vns
+        return self.loc_vns + rep_vns + 0.1 * min(self.loc_vns, rep_vns)
+
+
+def write_and_force_segs_async(
+    dev: PMEMDevice,
+    segs,
+    repl: Optional[ReplicationGroup] = None,
+    ordering: str = REP_LF,
+    local_durable: bool = True,
+) -> ForceRound:
+    """Issue-side half of the replication primitive: post the doorbell,
+    run the (overlapping) local flush, and return a :class:`ForceRound`
+    immediately — the wire round trip and the W-th-ack wait complete in
+    the background on the per-transport FIFO lanes.
+
+    This is the building block of the log's pipelined force engine: the
+    issuing thread never blocks on wire time, so multiple durability
+    rounds can be in flight at once.  With no replication group (or no
+    live backups) the round is complete by the time this returns and
+    ``wait()`` is free; the local flush sequence — and therefore the
+    local DeviceStats — is identical to the synchronous primitive.
+    """
+    segs = [(off, n) for off, n in segs if n > 0]
+
+    def _persist_all() -> float:
+        if not local_durable:
+            return 0.0
+        return sum(dev.persist(off, n) for off, n in segs)
+
+    if not segs:
+        return ForceRound(None, 0.0, ordering=ordering)
+    if repl is None:
+        return ForceRound(None, _persist_all(), ordering=ordering)
+    if not repl.live_transports():
+        loc_vns = _persist_all()
+        if repl.write_quorum > (1 if repl.local_is_durable else 0):
+            raise QuorumError("no live backups and local copy alone cannot "
+                              f"meet W={repl.write_quorum}")
+        return ForceRound(None, loc_vns, ordering=ordering)
+
+    if ordering == REP_LF:
+        rnd = repl.replicate_batch_async(dev, segs, local_ack_vns=0.0)
+        loc_vns = _persist_all()       # overlaps the wire time
+        return ForceRound(rnd, loc_vns, issue_vns=dev.cost.doorbell_ns,
+                          ordering=REP_LF)
+    if ordering in (LF_REP, PARALLEL):
+        loc_vns = _persist_all()
+        rnd = repl.replicate_batch_async(dev, segs, local_ack_vns=loc_vns)
+        return ForceRound(rnd, loc_vns, ordering=ordering)
     raise ValueError(f"unknown ordering {ordering!r}")
 
 

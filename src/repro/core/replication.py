@@ -67,6 +67,7 @@ def build_replica_set(
     cost: Optional[CostModel] = None,
     primary_id: str = "node0",
     open_existing: bool = False,
+    pipeline_depth: int = 1,
 ) -> ReplicaSet:
     """Construct devices + transports + group + log for one deployment."""
     if mode not in MODES:
@@ -80,7 +81,8 @@ def build_replica_set(
     if write_quorum is None:
         write_quorum = (n_durable // 2) + 1
     cfg = LogConfig(capacity=capacity, write_quorum=write_quorum,
-                    local_durable=local_durable)
+                    local_durable=local_durable,
+                    pipeline_depth=pipeline_depth)
     size = device_size(capacity)
     cost = cost or CostModel()
     # remote-only staging is DRAM: model as fast device (never persisted)

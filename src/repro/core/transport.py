@@ -100,6 +100,24 @@ class FailureSpec:
     delay_s: float = 0.0        # straggler: wall-clock stall per op
 
 
+@dataclass
+class _StagedWrite:
+    """Issue-side snapshot of one doorbell-batched write_imm.
+
+    The NIC DMA-reads the source ranges at *post* time (before any later
+    local flush can evict the lines — the REP_LF ordering of Fig. 6); the
+    wire + remote-persistence half runs later on the transport's FIFO
+    lane.  ``posted_at`` anchors injected wire latency to the doorbell
+    post, so multiple in-flight WQEs on one QP overlap on the wire the
+    way a real RC QP pipelines them (completions stay FIFO).
+    """
+
+    datas: List[Tuple[int, bytes]]
+    total: int
+    read_vns: float
+    posted_at: float
+
+
 class Transport:
     """A reliable-connection QP from the primary to one backup."""
 
@@ -181,11 +199,156 @@ class Transport:
             vns += self.server.handle_write_imm(off, data, self.primary_id)
         return vns
 
+    def post_write_imm_batch(self, src_dev: PMEMDevice,
+                             segs: Sequence[Tuple[int, int]]) -> _StagedWrite:
+        """Issue-side half of a doorbell-batched write_imm: admission gate
+        (op accounting + partition/failure injection — everything except
+        the straggler stall, which is wire time) plus the NIC DMA snapshot
+        of the source ranges.  Raises TransportError here, at post time,
+        if the transport is closed or partitioned; the caller treats that
+        as this backup failing the round."""
+        self._ops += 1
+        if self._closed:
+            raise TransportError("transport closed")
+        if self.failure.drop:
+            raise TransportError(f"timeout after {self.timeout_ns:.0f} vns "
+                                 f"(partition to {self.server.server_id})")
+        if 0 <= self.failure.fail_after_ops < self._ops:
+            raise TransportError(
+                f"backup {self.server.server_id} failed (injected)")
+        datas: List[Tuple[int, bytes]] = []
+        read_vns = 0.0
+        total = 0
+        for off, n in segs:
+            data, vns = src_dev.dma_read(off, n)   # NIC DMA at post time
+            datas.append((off, data))
+            read_vns += vns
+            total += n
+        return _StagedWrite(datas, total, read_vns, time.monotonic())
+
+    def write_imm_staged(self, staged: _StagedWrite) -> float:
+        """Wire + remote half of a posted write_imm_batch (runs on the
+        FIFO lane).  An injected straggler delay counts from the doorbell
+        *post*, not from lane dequeue, so in-flight WQEs overlap on the
+        wire while completions stay in order."""
+        if self.failure.delay_s > 0:
+            remaining = staged.posted_at + self.failure.delay_s \
+                - time.monotonic()
+            if remaining > 0:
+                time.sleep(remaining)
+        if self._closed:
+            raise TransportError("transport closed")
+        vns = staged.read_vns + self.cost.rdma_rtt_ns \
+            + staged.total * self.cost.rdma_byte_ns
+        for off, data in staged.datas:
+            vns += self.server.handle_write_imm(off, data, self.primary_id)
+        return vns
+
     def read(self, off: int, n: int) -> Tuple[bytes, float]:
         """One-sided RDMA Read (recovery/repair path)."""
         self._gate()
         data, remote_vns = self.server.handle_read(off, n)
         return data, self.cost.rdma_rtt_ns + n * self.cost.rdma_byte_ns + remote_vns
+
+
+class QuorumRound:
+    """Handle for one issued (in-flight) quorum round.
+
+    Returned by the ``*_async`` issue paths once the doorbell has been
+    posted on every live lane.  ``result()`` blocks until the round
+    settles: quorum met (returns the W-th smallest ack vns) or quorum
+    arithmetically unreachable (raises QuorumError; a non-transport lane
+    error is re-raised instead and un-stashed from the group's deferred
+    list).  ``add_done_callback`` fires exactly once when the round
+    settles — on the lane thread that settles it, or inline if already
+    settled — which is what lets the log retire rounds without a
+    dedicated retirement thread.
+    """
+
+    def __init__(self, group: "ReplicationGroup", write_quorum: int):
+        self._group = group
+        self._w = write_quorum
+        self._cv = threading.Condition()
+        self._acks: List[float] = []
+        self._outstanding = 0
+        self._sealed = False
+        self._fatal: Optional[BaseException] = None
+        self._callbacks: List[Callable[[], None]] = []
+
+    # -- issue-side wiring (group only) ---------------------------------- #
+    def _ack_local(self, vns: float) -> None:
+        self._acks.append(vns)
+
+    def _track(self, fut: Future) -> None:
+        with self._cv:
+            self._outstanding += 1
+        # added AFTER the group's _harvest callback, so by the time
+        # _on_done runs, eviction / error stashing has been applied
+        fut.add_done_callback(self._on_done)
+
+    def _settled_locked(self) -> bool:
+        return (len(self._acks) >= self._w
+                or (self._sealed and len(self._acks) + self._outstanding
+                    < self._w))
+
+    def _fire_if_settled(self) -> None:
+        with self._cv:
+            if not self._settled_locked():
+                return
+            fire, self._callbacks = self._callbacks, []
+            self._cv.notify_all()
+        for cb in fire:
+            cb()
+
+    def _on_done(self, fut: Future) -> None:
+        with self._cv:
+            self._outstanding -= 1
+            exc = fut.exception() if not fut.cancelled() else \
+                TransportError("lane op cancelled")
+            if exc is None:
+                self._acks.append(fut.result())
+            elif not isinstance(exc, TransportError) and self._fatal is None:
+                self._fatal = exc
+        self._fire_if_settled()
+
+    def _seal(self) -> None:
+        """All lanes posted: the ack universe is now fixed."""
+        with self._cv:
+            self._sealed = True
+        self._fire_if_settled()
+
+    # -- caller surface --------------------------------------------------- #
+    def done(self) -> bool:
+        with self._cv:
+            return self._settled_locked()
+
+    def add_done_callback(self, fn: Callable[[], None]) -> None:
+        with self._cv:
+            if not self._settled_locked():
+                self._callbacks.append(fn)
+                return
+        fn()
+
+    def result(self, timeout: Optional[float] = None) -> float:
+        """W-th smallest ack vns; QuorumError if the quorum cannot fill;
+        TimeoutError if the round has not settled within ``timeout``."""
+        with self._cv:
+            if not self._cv.wait_for(self._settled_locked, timeout):
+                raise TimeoutError("quorum round still in flight")
+            if len(self._acks) >= self._w:
+                return sorted(self._acks)[self._w - 1]
+            exc: BaseException = self._fatal if self._fatal is not None \
+                else QuorumError(f"write quorum {self._w} not met "
+                                 f"({len(self._acks)} acks)")
+        if not isinstance(exc, QuorumError):
+            # un-stash the harvest's copy so it doesn't re-raise on a
+            # later unrelated call (same contract as the sync round)
+            with self._group._pending_cv:
+                try:
+                    self._group._errors.remove(exc)
+                except ValueError:
+                    pass
+        raise exc
 
 
 class ReplicationGroup:
@@ -271,17 +434,21 @@ class ReplicationGroup:
             exc = self._errors.pop(0)
         raise exc
 
-    def drain(self, timeout: Optional[float] = None) -> bool:
+    def drain(self, timeout: Optional[float] = None,
+              surface_errors: bool = True) -> bool:
         """Wait until every in-flight straggler op has completed AND its
         harvest (eviction, error stash) has been applied, then surface
         any non-transport error a straggler raised.  Returns False if
         ``timeout`` expired with ops still in flight (their side effects
-        have NOT all landed yet)."""
+        have NOT all landed yet).  With ``surface_errors=False`` only
+        the wait happens: stashed errors stay deferred for the next
+        caller (failover drains use this so the signal is not lost)."""
         with self._pending_cv:
             snapshot = set(self._pending)
             drained = self._pending_cv.wait_for(
                 lambda: not (snapshot & self._pending), timeout=timeout)
-        self._raise_deferred()
+        if surface_errors:
+            self._raise_deferred()
         return drained
 
     # -- quorum rounds ----------------------------------------------------- #
@@ -349,6 +516,37 @@ class ReplicationGroup:
         segs = list(segs)
         return self._quorum_round(
             lambda t: t.write_imm_batch(src_dev, segs), local_ack_vns)
+
+    def replicate_batch_async(self, src_dev: PMEMDevice,
+                              segs: Sequence[Tuple[int, int]],
+                              local_ack_vns: Optional[float] = 0.0
+                              ) -> QuorumRound:
+        """Post one doorbell-batched replication round on every live lane
+        and return immediately with a :class:`QuorumRound` handle.
+
+        The NIC DMA snapshot of the source ranges happens here, at post
+        time — before any subsequent local flush can evict the lines
+        (the REP_LF ordering), and before the issuing thread moves on —
+        so the issuing thread pays only the post; wire time and remote
+        persistence complete on the FIFO lanes in the background.  A
+        transport that fails its admission gate at post time is evicted
+        on the spot and counts as a failed replica for this round.
+        """
+        segs = list(segs)
+        self._raise_deferred()
+        rnd = QuorumRound(self, self.write_quorum)
+        if self.local_is_durable and local_ack_vns is not None:
+            rnd._ack_local(local_ack_vns)
+        for t in self.live_transports():
+            try:
+                staged = t.post_write_imm_batch(src_dev, segs)
+            except TransportError:
+                t.close()        # evict, exactly as the lane harvest would
+                continue
+            fut = self._submit(t, lambda tt, s=staged: tt.write_imm_staged(s))
+            rnd._track(fut)
+        rnd._seal()
+        return rnd
 
     def broadcast_bytes(self, data: bytes, dst_off: int) -> float:
         """Replicate a small DRAM buffer (superline updates, epoch bumps).

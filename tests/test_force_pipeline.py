@@ -1,0 +1,323 @@
+"""Pipelined force engine (DESIGN.md §8): round overlap, in-order
+watermark retirement, failure semantics, non-blocking leader handoff,
+and pipeline drain."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (ClusterManager, FreqPolicy, Log, LogConfig, LogError,
+                        Node, PMEMDevice, QuorumError, build_replica_set)
+from repro.core.replication import device_size
+
+pytestmark = pytest.mark.slow   # spins up replica servers per test
+
+CAP = 1 << 16
+
+
+def _pipelined_rs(depth, n_backups=2, write_quorum=2):
+    return build_replica_set(mode="local+remote", capacity=CAP,
+                             n_backups=n_backups, write_quorum=write_quorum,
+                             pipeline_depth=depth)
+
+
+def _stream(log, pol, n, size=64):
+    for _ in range(n):
+        rid, ptr = log.reserve(size)
+        ptr[:] = b"x" * size
+        log.complete(rid)
+        pol.on_complete(log, rid)
+
+
+# --------------------------------------------------------------------- #
+# overlap + in-order retirement
+# --------------------------------------------------------------------- #
+def test_pipeline_depth_overlaps_wire_rounds():
+    """Depth D must overlap durability rounds on the wire: wall-clock of
+    a non-blocking force stream over an injected RTT drops well below
+    the serial (depth-1) run."""
+    walls = {}
+    for depth in (1, 4):
+        rs = _pipelined_rs(depth)
+        pol = FreqPolicy(4, wait=False)
+        _stream(rs.log, pol, 8)            # warm the whole path, undelayed
+        pol.drain(rs.log)
+        for t in rs.transports:
+            t.inject(delay_s=0.01)
+        t0 = time.perf_counter()
+        _stream(rs.log, pol, 48)           # 12 durability rounds
+        pol.drain(rs.log)
+        walls[depth] = time.perf_counter() - t0
+        assert rs.log.durable_lsn == 56
+        rs.group.drain()
+        rs.shutdown()
+    # serial ≈ 12 RTTs, depth-4 ≈ 3-4 RTTs; 0.7 leaves headroom for a
+    # noisy scheduler without masking a lost overlap
+    assert walls[4] < walls[1] * 0.7, walls
+
+
+def test_concurrent_writers_gapless_watermark():
+    """durable_lsn only ever advances over a gapless prefix, even with
+    concurrent writers feeding a depth-4 pipeline; every backup ends up
+    holding the full history."""
+    rs = _pipelined_rs(4)
+    log = rs.log
+    pol = FreqPolicy(2, wait=False)
+    errors = []
+
+    def worker():
+        try:
+            for _ in range(30):
+                rid, ptr = log.reserve(16)
+                ptr[:] = b"c" * 16
+                log.complete(rid)
+                pol.on_complete(log, rid)
+                d = log.durable_lsn
+                c = log.completed_lsn          # read after d: c >= c@d
+                assert d <= c, f"watermark {d} ahead of complete {c}"
+        except Exception as e:                 # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    pol.drain(log)
+    assert not errors
+    assert log.durable_lsn == 120
+    assert log.stats()["inflight_rounds"] == 0
+    for s in rs.servers:
+        relog = Log.open(s.device, LogConfig(capacity=CAP))
+        assert len(list(relog.iter_records())) == 120
+    rs.shutdown()
+
+
+def test_wait_false_returns_before_quorum():
+    """Non-blocking leader handoff: force(wait=False) returns after the
+    doorbell post, not after the W-th ack."""
+    rs = _pipelined_rs(4, n_backups=1, write_quorum=2)
+    rs.log.append(b"w")
+    rs.log.drain()
+    rs.transports[0].inject(delay_s=0.2)
+    rid, ptr = rs.log.reserve(8)
+    ptr[:] = b"q" * 8
+    rs.log.complete(rid)
+    t0 = time.perf_counter()
+    rs.log.force(rid, wait=False)
+    assert time.perf_counter() - t0 < 0.1, "handoff blocked on the wire"
+    assert rs.log.durable_lsn < rid
+    rs.log.drain(timeout=5.0)
+    assert rs.log.durable_lsn == rid
+    rs.group.drain()
+    rs.shutdown()
+
+
+# --------------------------------------------------------------------- #
+# failure paths
+# --------------------------------------------------------------------- #
+def test_force_exception_resets_pipeline_and_unblocks_later_forces():
+    """An exception inside a force round (here: the local flush dies)
+    resets the pipeline state — no in-flight round, issue watermark
+    rolled back — and later forces succeed without re-raising."""
+    dev = PMEMDevice(device_size(CAP))
+    log = Log.create(dev, LogConfig(capacity=CAP))
+    rid, ptr = log.reserve(8)
+    ptr[:] = b"a" * 8
+    log.complete(rid)
+    orig = dev.persist
+    dev.persist = lambda off, n: (_ for _ in ()).throw(
+        RuntimeError("flush died"))
+    with pytest.raises(RuntimeError):
+        log.force(rid)
+    dev.persist = orig
+    assert log.stats()["inflight_rounds"] == 0
+    assert not log._force_busy
+    assert log.force(rid) == rid           # no deferred re-raise, no wedge
+    assert log.durable_lsn == rid
+
+
+def test_force_timeout_on_incomplete_record_does_not_wedge():
+    dev = PMEMDevice(device_size(CAP))
+    log = Log.create(dev, LogConfig(capacity=CAP))
+    rid, ptr = log.reserve(8)
+    with pytest.raises(LogError):
+        log.force(rid, timeout=0.05)       # never completed: times out
+    ptr[:] = b"b" * 8
+    log.complete(rid)
+    assert log.force(rid) == rid
+
+
+def test_force_timeout_on_stuck_round_does_not_wedge_later_forces():
+    rs = _pipelined_rs(2, n_backups=1, write_quorum=2)
+    rs.log.append(b"w")
+    rs.transports[0].inject(delay_s=0.4)
+    rid, ptr = rs.log.reserve(8)
+    ptr[:] = b"s" * 8
+    rs.log.complete(rid)
+    with pytest.raises(LogError):
+        rs.log.force(rid, timeout=0.05)    # round still on the wire
+    rid2, p2 = rs.log.reserve(8)
+    p2[:] = b"t" * 8
+    rs.log.complete(rid2)
+    # once the wire settles, the pipeline keeps retiring in order
+    assert rs.log.force(rid2, timeout=5.0) == rid2
+    rs.log.drain(timeout=5.0)
+    rs.group.drain()
+    rs.shutdown()
+
+
+def test_pipelined_quorum_error_propagates_to_all_covered_waiters():
+    """Two rounds in flight; the head round's quorum fails (old primary
+    gets fenced mid-wire) — BOTH waiters must raise QuorumError: a hole
+    can never be skipped, so the failure of round N fails round N+1."""
+    rs = _pipelined_rs(2, n_backups=2, write_quorum=3)
+    rs.log.append(b"w")
+    rs.transports[0].inject(delay_s=0.3)   # node1's wire is slow
+    results = []
+
+    def forcer(rid):
+        try:
+            rs.log.force(rid, timeout=5.0)
+            results.append(None)
+        except Exception as e:
+            results.append(e)
+
+    threads = []
+    for i in range(2):
+        rid, ptr = rs.log.reserve(8)
+        ptr[:] = bytes([i]) * 8
+        rs.log.complete(rid)
+        th = threading.Thread(target=forcer, args=(rid,))
+        th.start()
+        threads.append(th)
+        deadline = time.time() + 2.0
+        while rs.log.stats()["issue_lsn"] < rid and time.time() < deadline:
+            time.sleep(0.005)
+        assert rs.log.stats()["issue_lsn"] >= rid, "round never issued"
+    rs.servers[0].fence("node0")           # node1 now rejects the writes
+    for th in threads:
+        th.join(timeout=10.0)
+    assert len(results) == 2
+    assert all(isinstance(r, QuorumError) for r in results), results
+    # pipeline reset: nothing in flight, watermark never skipped the hole
+    assert rs.log.stats()["inflight_rounds"] == 0
+    assert rs.log.durable_lsn == 1
+    rs.group.drain()
+    rs.shutdown()
+
+
+def test_wait_false_round_failure_surfaces_on_drain():
+    """A non-blocking round that fails with no covering waiter defers
+    its QuorumError to drain (kv.flush) instead of dropping it."""
+    rs = _pipelined_rs(2, n_backups=2, write_quorum=3)
+    rs.log.append(b"w")
+    rs.fail_backup("node1")                # W=3 now unreachable
+    rid, ptr = rs.log.reserve(8)
+    ptr[:] = b"z" * 8
+    rs.log.complete(rid)
+    rs.log.force(rid, wait=False)
+    with pytest.raises(QuorumError):
+        rs.log.drain(timeout=5.0)
+    assert rs.log.stats()["inflight_rounds"] == 0
+    assert rs.log.durable_lsn == 1         # failed round never retired
+    rs.shutdown()
+
+
+def test_wait_false_window_stays_within_pipelined_bound():
+    """The F×T bound does not hold under the non-blocking handoff (up to
+    depth issued-but-unretired rounds extend the window); the policy
+    must report the pipelined bound (depth+1)×F×T and the observed
+    window must respect it."""
+    rs = _pipelined_rs(4, n_backups=1, write_quorum=2)
+    log = rs.log
+    log.cfg.max_threads = 1                # single writer: T = 1
+    rs.transports[0].inject(delay_s=0.05)  # keep rounds in flight
+    pol = FreqPolicy(4, wait=False)
+    assert pol.vulnerability_bound(log) == 4 * 1 * (4 + 1)
+    worst = 0
+    for _ in range(32):
+        rid, ptr = log.reserve(8)
+        ptr[:] = b"v" * 8
+        log.complete(rid)
+        pol.on_complete(log, rid)
+        worst = max(worst, log.vulnerability_window())
+    assert worst <= pol.vulnerability_bound(log), \
+        f"window {worst} exceeds pipelined bound"
+    assert worst > 4, "pipeline never extended the window (test inert)"
+    pol.drain(log)
+    rs.group.drain()
+    rs.shutdown()
+
+
+def test_force_on_durable_lsn_does_not_block_behind_issue_lock():
+    """A force whose LSN is already durable must return immediately even
+    while a slot-waiting leader holds the issue lock across a wire
+    round (fast path ahead of _issue_lock)."""
+    rs = _pipelined_rs(1, n_backups=1, write_quorum=2)
+    log = rs.log
+    log.append(b"a")                       # lsn 1 durable
+    rs.transports[0].inject(delay_s=0.3)
+    rid2, p2 = log.reserve(8)
+    p2[:] = b"b" * 8
+    log.complete(rid2)
+    log.force(rid2, wait=False)            # round 2 on the wire
+    rid3, p3 = log.reserve(8)
+    p3[:] = b"c" * 8
+    log.complete(rid3)
+    blocker = threading.Thread(target=log.force, args=(rid3,))
+    blocker.start()                        # waits for a depth-1 slot
+    time.sleep(0.05)                       # let it grab _issue_lock
+    t0 = time.perf_counter()
+    assert log.force(1) >= 1               # already durable: instant
+    assert time.perf_counter() - t0 < 0.1, \
+        "durable-LSN force queued behind the issue lock"
+    blocker.join(timeout=5.0)
+    rs.log.drain(timeout=5.0)
+    rs.group.drain()
+    rs.shutdown()
+
+
+# --------------------------------------------------------------------- #
+# failover drains the pipeline before the epoch fence
+# --------------------------------------------------------------------- #
+def test_cluster_failover_drains_pipeline_before_fencing():
+    rs = _pipelined_rs(4)
+    nodes = [Node("node0")] + [Node(s.server_id, server=s)
+                               for s in rs.servers]
+    cm = ClusterManager(nodes)
+    cm.attach_log(rs.log)
+    for t in rs.transports:
+        t.inject(delay_s=0.1)
+    pol = FreqPolicy(2, wait=False)
+    _stream(rs.log, pol, 8, size=8)
+    # rounds are in flight; the failover must settle them BEFORE backups
+    # fence the old primary, so no round straddles the epoch change
+    assert cm.report_failure("node0") == "node1"
+    assert rs.log.stats()["inflight_rounds"] == 0
+    assert rs.log.durable_lsn == 8
+    rs.group.drain()
+    rs.shutdown()
+
+
+def test_cluster_drain_preserves_deferred_round_errors():
+    """The failover drain settles the pipeline with surface_errors=False:
+    a deferred wait=False QuorumError must still raise on the log's own
+    next drain, not vanish into report_failure's best-effort except."""
+    rs = _pipelined_rs(2, n_backups=2, write_quorum=3)
+    nodes = [Node("node0")] + [Node(s.server_id, server=s)
+                               for s in rs.servers]
+    cm = ClusterManager(nodes)
+    cm.attach_log(rs.log)
+    rs.log.append(b"w")
+    rs.fail_backup("node1")                # W=3 unreachable from now on
+    rid, ptr = rs.log.reserve(8)
+    ptr[:] = b"z" * 8
+    rs.log.complete(rid)
+    rs.log.force(rid, wait=False)          # fails with no covering waiter
+    rs.log.drain(timeout=5.0, surface_errors=False)   # round settled
+    cm.report_failure("node0")             # failover drain runs here
+    with pytest.raises(QuorumError):       # ...but the signal survived
+        rs.log.drain(timeout=5.0)
+    rs.shutdown()
