@@ -334,15 +334,18 @@ def _replica_stats(rs) -> dict:
             for name, dev in sorted(rs.server_devices().items())}
 
 
-def fig6_pipeline_run(depth: int) -> dict:
+def fig6_pipeline_run(depth: int, adaptive: bool = False) -> dict:
     """One depth row of the acceptance workload: a single-writer
     FreqPolicy stream with non-blocking leader handoff over an injected
     wire RTT.  At depth 1 every durability round serializes behind the
     previous round's W-th ack; at depth D up to D rounds overlap on the
     wire, so wall-clock drops ~multiplicatively while the modelled
-    hardware work (DeviceStats on every copy) is identical."""
+    hardware work (DeviceStats on every copy) is identical.  With
+    ``adaptive`` the depth argument is the controller's CEILING and the
+    row records the depth trajectory it actually drove."""
     rs = build_replica_set(mode="local+remote", capacity=CAP6, n_backups=2,
-                           write_quorum=2, pipeline_depth=depth)
+                           write_quorum=2, pipeline_depth=depth,
+                           adaptive_depth=adaptive)
     payload = b"p" * PIPE_PAYLOAD
     pol = FreqPolicy(PIPE_FREQ, wait=False)
     for _ in range(PIPE_WARM):
@@ -371,9 +374,10 @@ def fig6_pipeline_run(depth: int) -> dict:
     for lsn, p in relog.iter_records():
         digest = zlib.crc32(p, zlib.crc32(str(lsn).encode(), digest))
         n_rec += 1
+    trajectory = [list(p) for p in rs.log.depth_trajectory]
     rs.shutdown()
     total = PIPE_WARM + PIPE_RECORDS
-    return dict(
+    row = dict(
         pipeline_depth=depth, records=PIPE_RECORDS,
         wire_delay_ms=PIPE_DELAY_S * 1e3, force_freq=PIPE_FREQ,
         wall_ms=round(wall_ms, 2),
@@ -381,6 +385,84 @@ def fig6_pipeline_run(depth: int) -> dict:
         durable_lsn=durable, recovered_records=n_rec,
         record_set_ok=bool(durable == total and n_rec == total),
         digest=digest, stats=stats,
+    )
+    if adaptive:
+        row["adaptive"] = True
+        row["depth_ceiling"] = depth
+        row["depth_trajectory"] = trajectory
+    return row
+
+
+# salvage row (PR 5): W=3 over local+2 backups so one mid-wire backup
+# death fails every in-flight round; after the rejoin the next leader
+# re-issues only the (backup x range) deltas that never acked.
+SALV_RECORDS = 48
+SALV_FAIL_AT = 24
+SALV_SLOW_S = 0.03            # dying backup: acks never land in time
+SALV_FAST_S = 0.002           # healthy backup: acks land first
+
+
+def fig6_salvage_run() -> dict:
+    """Mid-pipeline backup failure vs a no-fault control run: the
+    salvaged stream must converge to the identical record digest with
+    identical primary write-side DeviceStats (failed rounds were already
+    persisted at first issue; the re-issue reuses posted wire images),
+    and the re-issued wire bytes must stay strictly below what a full
+    re-issue of the failed rounds would have sent."""
+    runs = {}
+    for fault in (False, True):
+        rs = build_replica_set(mode="local+remote", capacity=CAP6,
+                               n_backups=2, write_quorum=3,
+                               pipeline_depth=4)
+        log = rs.log
+        pol = FreqPolicy(PIPE_FREQ, wait=False)
+        payload = b"s" * PIPE_PAYLOAD
+        for _ in range(PIPE_WARM):
+            log.append(payload)
+        log.drain()
+        rs.transports[0].inject(delay_s=SALV_SLOW_S)
+        rs.transports[1].inject(delay_s=SALV_FAST_S)
+        for i in range(SALV_RECORDS):
+            if fault and i == SALV_FAIL_AT:
+                rs.kill_backup_midwire("node1", settle_s=SALV_FAST_S * 8)
+                rs.recover_backup("node1")      # rejoin: salvage from here
+            rid, ptr = log.reserve(len(payload))
+            ptr[:] = payload
+            log.complete(rid)
+            pol.on_complete(log, rid)
+        pol.drain(log)
+        rs.group.drain()
+        st = log.stats()
+        relog = Log.open(rs.primary_dev, LogConfig(capacity=CAP6))
+        digest, n_rec = 0, 0
+        for lsn, p in relog.iter_records():
+            digest = zlib.crc32(p, zlib.crc32(str(lsn).encode(), digest))
+            n_rec += 1
+        runs[fault] = dict(
+            digest=digest, recovered=n_rec, durable=st["durable_lsn"],
+            salvage_rounds=st["salvage_rounds"],
+            reissue_bytes=st["reissue_bytes"],
+            failed_rounds_bytes=st["full_reissue_bytes"],
+            stats={k: getattr(rs.primary_dev.stats, k) for k in STAT_KEYS},
+        )
+        rs.shutdown()
+    fault, control = runs[True], runs[False]
+    total = PIPE_WARM + SALV_RECORDS
+    return dict(
+        write_quorum=3, records=SALV_RECORDS, fail_at=SALV_FAIL_AT,
+        record_bytes=PIPE_PAYLOAD, force_freq=PIPE_FREQ,
+        salvage_rounds=fault["salvage_rounds"],
+        reissue_bytes=fault["reissue_bytes"],
+        failed_rounds_bytes=fault["failed_rounds_bytes"],
+        reissue_fraction=round(fault["reissue_bytes"]
+                               / max(fault["failed_rounds_bytes"], 1), 3),
+        durable_lsn=fault["durable"],
+        record_set_ok=bool(fault["durable"] == total
+                           and fault["recovered"] == total),
+        digest_matches_no_fault=bool(fault["digest"] == control["digest"]),
+        primary_stats_match_no_fault=bool(
+            fault["stats"] == control["stats"]),
+        digest=fault["digest"],
     )
 
 
@@ -511,29 +593,63 @@ def run_fig8(out_path: str) -> list:
     return problems
 
 
+ADAPTIVE_CEILING = 8
+
+
 def run_fig6(out_path: str) -> list:
     problems = []
     rows = {}
     depth_rows = [fig6_pipeline_run(d) for d in PIPE_DEPTHS]
     for r in depth_rows:
         rows[f"fig6/pipelined_force/depth{r['pipeline_depth']}"] = r
+    adaptive = fig6_pipeline_run(ADAPTIVE_CEILING, adaptive=True)
+    rows["fig6/pipelined_force/adaptive"] = adaptive
+    salvage = fig6_salvage_run()
+    rows["fig6/pipelined_force/salvage"] = salvage
     rows["fig6/replication/straggler"] = fig6_straggler_run()
 
     base = depth_rows[0]
-    for r in depth_rows:
+    for r in depth_rows + [adaptive]:
+        tag = "adaptive" if r.get("adaptive") \
+            else f"depth{r['pipeline_depth']}"
         if not r["record_set_ok"]:
-            problems.append(f"fig6/depth{r['pipeline_depth']}: durable or "
+            problems.append(f"fig6/{tag}: durable or "
                             "recovered record set wrong")
         if r["stats"] != base["stats"]:
-            problems.append(f"fig6/depth{r['pipeline_depth']}: DeviceStats "
+            problems.append(f"fig6/{tag}: DeviceStats "
                             "differ from the depth-1 row")
         if r["digest"] != base["digest"]:
-            problems.append(f"fig6/depth{r['pipeline_depth']}: recovered "
+            problems.append(f"fig6/{tag}: recovered "
                             "record digest differs from the depth-1 row")
-        if r["pipeline_depth"] >= 2 and r["wall_ms"] >= base["wall_ms"]:
+        if r is not base and r["wall_ms"] >= base["wall_ms"]:
             problems.append(
-                f"fig6/depth{r['pipeline_depth']}: wall {r['wall_ms']}ms "
+                f"fig6/{tag}: wall {r['wall_ms']}ms "
                 f"not strictly below serial {base['wall_ms']}ms")
+    # adaptive acceptance: within 10% of the best static depth with no
+    # tuning, driven by a recorded grow/shrink trajectory
+    best_static = min(r["wall_ms"] for r in depth_rows)
+    if adaptive["wall_ms"] > best_static * 1.10:
+        problems.append(
+            f"fig6/adaptive: wall {adaptive['wall_ms']}ms more than 10% "
+            f"over best static depth ({best_static}ms)")
+    depths = [d for _, d in adaptive["depth_trajectory"]]
+    if len(depths) < 2 or max(depths) > ADAPTIVE_CEILING:
+        problems.append("fig6/adaptive: depth trajectory missing or "
+                        "exceeds the ceiling")
+    # salvage acceptance: re-issue strictly below the failed rounds'
+    # total bytes, content and primary hardware work fault-invariant
+    if not salvage["record_set_ok"]:
+        problems.append("fig6/salvage: record set wrong after salvage")
+    if not salvage["digest_matches_no_fault"]:
+        problems.append("fig6/salvage: digest diverged from no-fault run")
+    if not salvage["primary_stats_match_no_fault"]:
+        problems.append("fig6/salvage: fault schedule changed primary "
+                        "DeviceStats")
+    if not (0 < salvage["reissue_bytes"] < salvage["failed_rounds_bytes"]):
+        problems.append(
+            f"fig6/salvage: reissue_bytes {salvage['reissue_bytes']} not "
+            f"strictly below failed rounds' total "
+            f"{salvage['failed_rounds_bytes']}")
     if rows["fig6/replication/straggler"]["bounded_by_slowest"]:
         problems.append("fig6: replicate wall-clock bounded by straggler")
 
@@ -543,13 +659,18 @@ def run_fig6(out_path: str) -> list:
                           records=PIPE_RECORDS, warm=PIPE_WARM,
                           force_freq=PIPE_FREQ, wire_delay_s=PIPE_DELAY_S,
                           pipeline_depths=list(PIPE_DEPTHS),
+                          adaptive_ceiling=ADAPTIVE_CEILING,
+                          salvage=dict(records=SALV_RECORDS,
+                                       fail_at=SALV_FAIL_AT,
+                                       write_quorum=3),
                           n_backups=2, write_quorum=2,
                           straggler_delay_s=FIG6_DELAY_S),
             acceptance=dict(
                 serial_wall_ms=base["wall_ms"],
-                best_wall_ms=min(r["wall_ms"] for r in depth_rows),
-                speedup=round(base["wall_ms"]
-                              / min(r["wall_ms"] for r in depth_rows), 2),
+                best_wall_ms=best_static,
+                adaptive_wall_ms=adaptive["wall_ms"],
+                speedup=round(base["wall_ms"] / best_static, 2),
+                salvage_reissue_fraction=salvage["reissue_fraction"],
                 passed=not problems),
         ),
         rows=rows,

@@ -13,7 +13,13 @@
 (f) pipelined force engine (PR 4) — wall-clock of a non-blocking
     FreqPolicy append stream vs LogConfig.pipeline_depth under an
     injected wire RTT: depth D overlaps D durability rounds on the wire,
-    so the stream stops being bounded by one RTT per force round.
+    so the stream stops being bounded by one RTT per force round.  The
+    "adaptive" row (PR 5) lets the controller size the depth itself
+    under the same ceiling-8 budget.
+(g) partial-quorum salvage (PR 5) — a mid-pipeline backup death fails
+    every in-flight round; after the rejoin the next leader re-issues
+    only the (backup × range) deltas that never acked, so re-issue
+    bytes sit well below a full re-issue of the failed rounds.
 """
 
 from __future__ import annotations
@@ -112,10 +118,12 @@ def pipelined_force(quick: bool = False):
     n = 48 if quick else 96
     delay_s = 0.002 if quick else 0.004
     payload = b"p" * 1024
-    for depth in (1, 2, 4, 8):
+    for depth, adaptive in ((1, False), (2, False), (4, False), (8, False),
+                            (8, True)):
         rs = build_replica_set(mode="local+remote", capacity=1 << 22,
                                n_backups=2, write_quorum=2,
-                               pipeline_depth=depth)
+                               pipeline_depth=depth,
+                               adaptive_depth=adaptive)
         pol = FreqPolicy(4, wait=False)
         for _ in range(8):
             rs.log.append(payload)                 # warm, undelayed
@@ -130,10 +138,44 @@ def pipelined_force(quick: bool = False):
             pol.on_complete(rs.log, rid)
         pol.drain(rs.log)
         wall = time.perf_counter() - t0
+        trajectory = rs.log.depth_trajectory
         rs.group.drain()
         rs.shutdown()
-        emit(f"fig6f/pipeline/depth{depth}", wall / n * 1e6,
-             f"wall_ms={wall * 1e3:.2f};rtt_ms={delay_s * 1e3:.0f}")
+        tag = "adaptive" if adaptive else f"depth{depth}"
+        extra = f";depths={'-'.join(str(d) for _, d in trajectory)}" \
+            if adaptive else ""
+        emit(f"fig6f/pipeline/{tag}", wall / n * 1e6,
+             f"wall_ms={wall * 1e3:.2f};rtt_ms={delay_s * 1e3:.0f}{extra}")
+
+
+def salvage(quick: bool = False):
+    n = 24 if quick else 48
+    payload = b"v" * 1024
+    rs = build_replica_set(mode="local+remote", capacity=1 << 22,
+                           n_backups=2, write_quorum=3, pipeline_depth=4)
+    pol = FreqPolicy(4, wait=False)
+    for _ in range(8):
+        rs.log.append(payload)
+    rs.log.drain()
+    rs.transports[0].inject(delay_s=0.03)      # node1: dies mid-wire
+    rs.transports[1].inject(delay_s=0.002)     # node2: acks land first
+    for i in range(n):
+        if i == n // 2:
+            # mid-pipeline quorum failure, then rejoin -> salvage
+            rs.kill_backup_midwire("node1", settle_s=0.016)
+            rs.recover_backup("node1")
+        rid, ptr = rs.log.reserve(len(payload))
+        ptr[:] = payload
+        rs.log.complete(rid)
+        pol.on_complete(rs.log, rid)
+    pol.drain(rs.log)
+    st = rs.log.stats()
+    rs.group.drain()
+    rs.shutdown()
+    frac = st["reissue_bytes"] / max(st["full_reissue_bytes"], 1)
+    emit("fig6g/salvage/reissue_bytes", st["reissue_bytes"],
+         f"full_reissue={st['full_reissue_bytes']};"
+         f"fraction={frac:.3f};rounds={st['salvage_rounds']}")
 
 
 def run(quick: bool = False):
@@ -141,6 +183,7 @@ def run(quick: bool = False):
     backup_scaling(quick)
     straggler_tolerance(quick)
     pipelined_force(quick)
+    salvage(quick)
 
 
 if __name__ == "__main__":

@@ -15,15 +15,16 @@ Public surface:
 
 from .pmem import CACHE_LINE, ATOM, CostModel, DeviceStats, PMEMDevice
 from .primitives import (AtomicRegion, ForceRound, IntegrityRegion, LF_REP,
-                         ORDERINGS, PARALLEL, REP_LF, persist,
-                         write_and_force, write_and_force_segs,
-                         write_and_force_segs_async)
+                         ORDERINGS, PARALLEL, REP_LF, SalvageForceRound,
+                         persist, reissue_segs, write_and_force,
+                         write_and_force_segs, write_and_force_segs_async)
 from .log import (Batch, CorruptLogError, Log, LogConfig, LogError,
                   LogFullError, Superline)
 from .force_policy import (ForcePolicy, FreqPolicy, GroupCommitPolicy,
                            SyncPolicy, make_policy)
 from .transport import (QuorumError, QuorumRound, ReplicaServer,
-                        ReplicationGroup, Transport, TransportError)
+                        ReplicationGroup, RoundSalvage, Transport,
+                        TransportError)
 from .replication import ReplicaSet, build_replica_set, device_size
 from .recovery import CopyAccessor, RecoveryError, RecoveryReport, \
     quorum_recover
@@ -32,14 +33,14 @@ from .cluster import ClusterManager, Node
 __all__ = [
     "CACHE_LINE", "ATOM", "CostModel", "DeviceStats", "PMEMDevice",
     "AtomicRegion", "ForceRound", "IntegrityRegion", "LF_REP", "ORDERINGS",
-    "PARALLEL", "REP_LF", "persist", "write_and_force",
-    "write_and_force_segs", "write_and_force_segs_async",
+    "PARALLEL", "REP_LF", "SalvageForceRound", "persist", "reissue_segs",
+    "write_and_force", "write_and_force_segs", "write_and_force_segs_async",
     "Batch", "CorruptLogError", "Log", "LogConfig", "LogError",
     "LogFullError", "Superline",
     "ForcePolicy", "FreqPolicy", "GroupCommitPolicy", "SyncPolicy",
     "make_policy",
     "QuorumError", "QuorumRound", "ReplicaServer", "ReplicationGroup",
-    "Transport", "TransportError",
+    "RoundSalvage", "Transport", "TransportError",
     "ReplicaSet", "build_replica_set", "device_size",
     "CopyAccessor", "RecoveryError", "RecoveryReport", "quorum_recover",
     "ClusterManager", "Node",

@@ -65,6 +65,14 @@ class ClusterManager:
                 # pipeline may be stuck precisely because the primary
                 # died); nothing was consumed
                 pass
+            try:
+                # the old primary's salvage stash dies with its epoch:
+                # its snapshotted wire images must never be re-issued to
+                # backups that are about to fence it — the new primary
+                # re-derives the tail through quorum recovery instead
+                log.abandon_salvage()
+            except Exception:
+                pass
 
     # -- queries ----------------------------------------------------------- #
     @property

@@ -60,8 +60,21 @@ class ForcePolicy:
             log.force(last, freq=1)
         log.drain()
 
-    def vulnerability_bound(self, log: Log) -> Optional[int]:
+    def _bound(self, log: Log, depth: int) -> Optional[int]:
         return None
+
+    def vulnerability_bound(self, log: Log) -> Optional[int]:
+        """Worst-case completed-but-unforced records, computed against
+        the pipeline-depth CEILING (cfg.pipeline_depth) — the promise
+        that holds whatever the adaptive controller does."""
+        return self._bound(log, log.cfg.pipeline_depth)
+
+    def effective_vulnerability_bound(self, log: Log) -> Optional[int]:
+        """Same formula against the adaptive controller's CURRENT depth
+        (DESIGN.md §9): the momentary exposure, which tightens whenever
+        the controller backs off after a failure.  Equals
+        vulnerability_bound for a static pipeline."""
+        return self._bound(log, log.pipeline_depth)
 
 
 class SyncPolicy(ForcePolicy):
@@ -76,14 +89,14 @@ class SyncPolicy(ForcePolicy):
         if lsns:
             log.force(lsns[-1], freq=1, wait=self.wait)
 
-    def vulnerability_bound(self, log: Log) -> Optional[int]:
+    def _bound(self, log: Log, depth: int) -> Optional[int]:
         # with the non-blocking handoff, issued-but-unretired rounds sit
         # in the window (one per pipeline slot, each covering at most one
         # record per completing thread), plus completed records whose
         # issuing thread is blocked on a full pipeline
-        if self.wait and log.cfg.pipeline_depth == 1:
+        if self.wait and depth == 1:
             return 0
-        return log.cfg.pipeline_depth + log.cfg.max_threads
+        return depth + log.cfg.max_threads
 
 
 class GroupCommitPolicy(ForcePolicy):
@@ -126,15 +139,15 @@ class GroupCommitPolicy(ForcePolicy):
         if lead:
             log.force(lsns[-1], freq=1, wait=self.wait)
 
-    def vulnerability_bound(self, log: Log) -> Optional[int]:
+    def _bound(self, log: Log, depth: int) -> Optional[int]:
         # window size + records racing in while the leader forces; with
-        # pipelining (or non-blocking handoff) up to pipeline_depth
+        # pipelining (or non-blocking handoff) up to ``depth``
         # issued-but-unretired rounds extend the window, each covering
         # at most one such span
         base = self.group_size + log.cfg.max_threads
-        if self.wait and log.cfg.pipeline_depth == 1:
+        if self.wait and depth == 1:
             return base
-        return base * (log.cfg.pipeline_depth + 1)
+        return base * (depth + 1)
 
 
 class FreqPolicy(ForcePolicy):
@@ -157,15 +170,15 @@ class FreqPolicy(ForcePolicy):
         if leaders:
             log.force(leaders[-1], freq=self.freq, wait=self.wait)
 
-    def vulnerability_bound(self, log: Log) -> Optional[int]:
+    def _bound(self, log: Log, depth: int) -> Optional[int]:
         """F × T (§4.4) for the serial blocking engine; with pipelining
-        or the non-blocking handoff, up to ``pipeline_depth``
+        or the non-blocking handoff, up to ``depth``
         issued-but-unretired rounds — each covering at most an F×T span
         — extend the worst case to (depth + 1) × F × T."""
         base = self.freq * log.cfg.max_threads
-        if self.wait and log.cfg.pipeline_depth == 1:
+        if self.wait and depth == 1:
             return base
-        return base * (log.cfg.pipeline_depth + 1)
+        return base * (depth + 1)
 
 
 def make_policy(name: str, *, freq: int = 8, group_size: int = 128,

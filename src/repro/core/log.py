@@ -52,9 +52,10 @@ from typing import Deque, Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from .pmem import PMEMDevice
-from .primitives import (AtomicRegion, ForceRound, REP_LF, write_and_force,
-                         write_and_force_segs_async)
-from .transport import QuorumError, ReplicationGroup
+from .primitives import (AtomicRegion, ForceRound, REP_LF, reissue_segs,
+                         write_and_force, write_and_force_segs_async)
+from .transport import (QuorumError, ReplicationGroup, RoundSalvage,
+                        TransportError)
 
 crc32 = zlib.crc32
 
@@ -169,11 +170,39 @@ def _rec_checksum(lsn: int, size: int, payload, phash: bool) -> int:
 # record states (volatile tracking)
 RESERVED, COMPLETED, FORCED = 0, 1, 2
 
+# After this many failed salvage retries for the same segment, its
+# deferred failure stops being held back at force-issue time: a backup
+# that never rejoins must not let wait=False forces spin silently
+# forever (the PR-4 surface-on-next-force contract, restored after a
+# bounded retry budget).
+_SALVAGE_RETRY_LIMIT = 3
+
 
 def _remaining(deadline: Optional[float]) -> Optional[float]:
     if deadline is None:
         return None
     return max(0.0, deadline - time.monotonic())
+
+
+@dataclass(slots=True)
+class _SalvageSeg:
+    """One failed round awaiting salvage (DESIGN.md §9).
+
+    Mirrors the failed ``_PipeRound``'s coverage (so the re-issue retires
+    to the same watermarks) plus the re-issuable remainder captured from
+    its quorum round.  ``deferred`` holds the failure exception(s) that
+    were stashed for the next force/drain with no covering waiter: a
+    successful salvage clears them — durability was achieved after all —
+    while a failed or never-attempted salvage leaves them to surface.
+    """
+
+    end_lsn: int
+    start_off: int
+    end_off: int
+    salv: RoundSalvage
+    deferred: List[BaseException] = field(default_factory=list)
+    attempts: int = 0     # failed salvage retries (bounded: see
+                          # _SALVAGE_RETRY_LIMIT)
 
 
 @dataclass(slots=True)
@@ -185,7 +214,10 @@ class _PipeRound:
     ``error`` is set when the round (or an earlier one — in-order commit
     cannot skip a hole) failed; ``waiters`` counts threads blocked on
     this round so a failure with no waiter is deferred to the next
-    force/drain instead of being dropped.
+    force/drain instead of being dropped.  A salvage round (one that
+    re-issues previously failed rounds) carries the stash entries it
+    covers in ``salvage_src`` — retired, it clears their deferred
+    errors; failed, it re-stashes them with updated ack sets.
     """
 
     end_lsn: int
@@ -194,6 +226,8 @@ class _PipeRound:
     handle: Optional[ForceRound] = None
     error: Optional[BaseException] = None
     waiters: int = 0
+    salvage_src: Optional[List[_SalvageSeg]] = None
+    gen: int = 0          # salvage generation at issue (tombstone guard)
 
 
 @dataclass(slots=True)
@@ -307,6 +341,16 @@ class LogConfig:
     # of the paper's Table 2, >= 2 overlaps wire time across rounds while
     # the durable watermark still retires strictly in LSN order
     pipeline_depth: int = 1
+    # adaptive depth controller (DESIGN.md §9): pipeline_depth becomes a
+    # CEILING; the effective depth starts at 1, grows while posts outpace
+    # retirements, halves on a round failure or slot timeout, and re-grows
+    # only after a clean window of retirements
+    adaptive_depth: bool = False
+    # partial-quorum salvage (DESIGN.md §9): a failed round's already
+    # acked (backup × range) deltas are kept and the next force leader
+    # re-issues only what never acked; False = the PR-4 behavior (the
+    # whole failed range is re-issued from scratch)
+    salvage: bool = True
 
 
 @dataclass
@@ -383,6 +427,23 @@ class Log:
         self._issue_lsn = 0           # all lsn <= this are covered by a round
         self._issue_off = 0           # ring-relative first un-issued byte
         self._pipe_errors: List[BaseException] = []
+        # partial-quorum salvage stash (DESIGN.md §9): failed rounds in
+        # LSN order, each carrying the (backup × range) deltas that never
+        # acked; the next force leader re-issues exactly those
+        self._salvage: List[_SalvageSeg] = []
+        self._salvage_gen = 0         # bumped whenever a tombstone rewrite
+                                      # invalidates pre-tombstone wire images
+        self.salvage_rounds_total = 0     # salvage rounds issued
+        self.reissue_bytes_total = 0      # wire bytes actually re-sent
+        self.full_reissue_bytes_total = 0  # counterfactual: full re-issue
+        # adaptive depth controller (DESIGN.md §9): cfg.pipeline_depth is
+        # the ceiling; _depth is the effective in-flight limit
+        self._depth = 1 if cfg.adaptive_depth else cfg.pipeline_depth
+        self._clean_retires = 0       # retirements since the last failure
+        self._grow_after = 0          # clean window required before re-grow
+        self._issue_seq = 0           # rounds issued (trajectory x-axis)
+        self.depth_trajectory: List[Tuple[int, int]] = [(0, self._depth)]
+        self.depth_trajectory_dropped = 0   # transitions beyond the cap
         self._epoch = 1
         self._head_lsn = 1
         self._head_off = 0
@@ -547,13 +608,51 @@ class Log:
             self._complete_upto = upto
             self._commit_cv.notify_all()
 
-    # -- force: the pipelined force engine (DESIGN.md §8) ----------------- #
+    # -- force: the pipelined force engine (DESIGN.md §8-9) --------------- #
     @property
     def _force_busy(self) -> bool:
         """True when no further round can be issued right now (pipeline
         full).  Kept for introspection; the pre-PR4 serial engine exposed
         the same flag for its single critical section."""
-        return len(self._inflight) >= self.cfg.pipeline_depth
+        return len(self._inflight) >= self._depth
+
+    @property
+    def pipeline_depth(self) -> int:
+        """The effective in-flight round limit right now: the adaptive
+        controller's current depth, or cfg.pipeline_depth when static."""
+        with self._commit_cv:
+            return self._depth
+
+    # a flapping backup can oscillate the controller indefinitely; the
+    # trajectory is an observability aid, not a ledger — cap it
+    _DEPTH_TRAJECTORY_CAP = 4096
+
+    def _record_depth_locked(self) -> None:
+        if len(self.depth_trajectory) >= self._DEPTH_TRAJECTORY_CAP:
+            self.depth_trajectory_dropped += 1
+            return
+        self.depth_trajectory.append((self._issue_seq, self._depth))
+
+    def _maybe_grow_locked(self) -> None:
+        """Grow the effective depth when posts outpace retirements: a
+        leader arrives while the pipeline is full.  Growth is gated, after
+        a failure, on a clean window of retirements (DESIGN.md §9)."""
+        if (self.cfg.adaptive_depth
+                and len(self._inflight) >= self._depth
+                and self._depth < self.cfg.pipeline_depth
+                and self._clean_retires >= self._grow_after):
+            self._depth += 1
+            self._record_depth_locked()
+
+    def _shrink_locked(self) -> None:
+        """Halve the effective depth (round failure or slot timeout) and
+        require a clean window of retirements before re-growing."""
+        if not self.cfg.adaptive_depth or self._depth <= 1:
+            return
+        self._depth = max(1, self._depth // 2)
+        self._clean_retires = 0
+        self._grow_after = self._depth
+        self._record_depth_locked()
 
     def force(self, rec_id: int, freq: int = 1,
               timeout: Optional[float] = None, wait: bool = True) -> int:
@@ -622,8 +721,11 @@ class Log:
         covered: claim the un-issued ring range, post the replication
         doorbell and run the overlapped local flush.  Posts are
         serialized under ``_issue_lock`` so rounds reach every FIFO lane
-        in LSN order.  Returns the in-flight round covering ``lsn``
-        (None when already durable)."""
+        in LSN order.  A pending salvage stash rides FIRST, bundled with
+        the leader's own fresh range into one round — only the (backup ×
+        range) deltas that never acked are re-sent, and the fresh bytes
+        can never retire ahead of the hole.  Returns the in-flight round
+        covering ``lsn`` (None when already durable)."""
         with self._commit_cv:
             # fast path: an already-durable or already-covered LSN must
             # not queue behind _issue_lock (a slot-waiting leader can
@@ -633,36 +735,73 @@ class Log:
             if self._issue_lsn >= lsn:
                 return self._covering_round_locked(lsn)
         with self._issue_lock:
+            salvage: Optional[List[_SalvageSeg]] = None
             with self._commit_cv:
                 if self._durable_lsn >= lsn:
                     return None
                 if self._issue_lsn >= lsn:
                     return self._covering_round_locked(lsn)
-                self._raise_pipe_deferred_locked()
+                self._raise_pipe_deferred_locked(issue=True)
+                self._maybe_grow_locked()
                 ok = self._commit_cv.wait_for(
-                    lambda: len(self._inflight) < self.cfg.pipeline_depth
+                    lambda: len(self._inflight) < self._depth
                     or self._durable_lsn >= lsn or self._issue_lsn >= lsn,
                     timeout=_remaining(deadline))
                 if not ok:
+                    self._shrink_locked()   # timeout: back off
                     raise LogError(
                         f"force({lsn}) timed out waiting for a pipeline "
-                        f"slot (depth={self.cfg.pipeline_depth})")
+                        f"slot (depth={self._depth})")
                 if self._durable_lsn >= lsn:
                     return None
                 if self._issue_lsn >= lsn:
                     return self._covering_round_locked(lsn)
-                start_off = self._issue_off
-                rec = self._recs[lsn]
-                end_off = (rec.off - self.ring_off) + rec.extent
-                entry = _PipeRound(lsn, start_off, end_off)
+                fresh_segs = None
+                if self._salvage:
+                    # bundle: the stashed deltas AND this leader's own
+                    # fresh range ride as ONE pipeline round, so the
+                    # fresh bytes can never retire ahead of the hole
+                    salvage, self._salvage = self._salvage, []
+                    end_lsn = salvage[-1].end_lsn
+                    start_off = salvage[0].start_off
+                    end_off = salvage[-1].end_off
+                    if lsn > end_lsn:
+                        fresh_start = end_off % self.cfg.capacity
+                        rec = self._recs[lsn]
+                        end_lsn = lsn
+                        end_off = (rec.off - self.ring_off) + rec.extent
+                        fresh_segs = self._range_segs(fresh_start, end_off)
+                    entry = _PipeRound(end_lsn, start_off, end_off,
+                                       salvage_src=salvage,
+                                       gen=self._salvage_gen)
+                else:
+                    start_off = self._issue_off
+                    rec = self._recs[lsn]
+                    end_off = (rec.off - self.ring_off) + rec.extent
+                    entry = _PipeRound(lsn, start_off, end_off,
+                                       gen=self._salvage_gen)
                 self._inflight.append(entry)
-                self._issue_lsn = lsn
-                self._issue_off = end_off % self.cfg.capacity
+                self._issue_lsn = entry.end_lsn
+                self._issue_off = entry.end_off % self.cfg.capacity
+                self._issue_seq += 1
             try:
-                handle = write_and_force_segs_async(
-                    self.dev, self._range_segs(start_off, end_off),
-                    self.repl, self.cfg.ordering,
-                    local_durable=self.cfg.local_durable)
+                if salvage is not None:
+                    handle = reissue_segs(
+                        self.dev, [s.salv for s in salvage], self.repl,
+                        self.cfg.ordering,
+                        local_durable=self.cfg.local_durable,
+                        fresh_segs=fresh_segs)
+                    self.salvage_rounds_total += 1
+                    self.reissue_bytes_total += handle.reissue_bytes
+                    lanes = len(self.repl.live_transports()) \
+                        if self.repl is not None else 0
+                    self.full_reissue_bytes_total += sum(
+                        s.salv.total for s in salvage) * max(lanes, 1)
+                else:
+                    handle = write_and_force_segs_async(
+                        self.dev, self._range_segs(start_off, end_off),
+                        self.repl, self.cfg.ordering,
+                        local_durable=self.cfg.local_durable)
             except BaseException as exc:
                 with self._commit_cv:
                     # surfaced=True: the issuing leader raises it itself
@@ -671,6 +810,8 @@ class Log:
             with self._commit_cv:
                 entry.handle = handle
         handle.add_done_callback(self._pipe_pump)
+        # a bundled stash always extends to at least lsn, so the entry
+        # covers the caller in every branch
         return entry
 
     def _pipe_pump(self) -> None:
@@ -693,16 +834,31 @@ class Log:
                 self._durable_lsn = entry.end_lsn
                 self._durable_off = entry.end_off % self.cfg.capacity
                 self.force_vns_total += vns
+                self._clean_retires += 1
+                if entry.salvage_src:
+                    # the salvaged ranges reached their write quorum after
+                    # all: durability was achieved, so the failures that
+                    # were deferred with no covering waiter are moot
+                    for seg in entry.salvage_src:
+                        for exc in seg.deferred:
+                            try:
+                                self._pipe_errors.remove(exc)
+                            except ValueError:
+                                pass
             self._commit_cv.notify_all()
 
     def _pipe_fail_locked(self, entry: _PipeRound, exc: BaseException,
                           surfaced: bool = False) -> None:
         """Fail ``entry`` and every round issued after it (in-order
         retirement cannot skip a hole), roll the issue watermark back to
-        the last surviving round so later forces re-issue the failed
-        range afresh, and wake every waiter.  ``surfaced`` means the
-        caller raises ``exc`` itself, so it must not also be deferred.
-        Caller holds _commit_cv."""
+        the last surviving round, and wake every waiter.  ``surfaced``
+        means the caller raises ``exc`` itself, so it must not also be
+        deferred.  With salvage enabled, a quorum/transport failure no
+        longer discards the failed rounds' progress: each one's unacked
+        (backup × range) remainder is stashed (LSN order, ahead of any
+        older stash — the failed rounds always precede it) so the next
+        leader re-issues only the deltas.  The adaptive controller
+        halves the effective depth.  Caller holds _commit_cv."""
         try:
             idx = self._inflight.index(entry)
         except ValueError:
@@ -710,21 +866,100 @@ class Log:
         failed: List[_PipeRound] = []
         while len(self._inflight) > idx:
             failed.append(self._inflight.pop())
+        failed.reverse()                      # LSN-ascending
         for e in failed:
             e.error = exc
         prev = self._inflight[-1] if self._inflight else None
         self._issue_lsn = prev.end_lsn if prev else self._durable_lsn
         self._issue_off = (prev.end_off % self.cfg.capacity) if prev \
             else self._durable_off
+        deferred: Optional[BaseException] = None
         if not surfaced and all(e.waiters == 0 for e in failed):
             # nobody is covering these rounds: defer so the error still
-            # surfaces (next force issue, or drain)
+            # surfaces (next force issue with no salvage pending, or
+            # drain) — a later successful salvage clears it
+            deferred = exc
             self._pipe_errors.append(exc)
+        stash: List[_SalvageSeg] = []
+        if self.cfg.salvage and isinstance(exc, (QuorumError,
+                                                 TransportError)):
+            for e in failed:
+                if e.gen != self._salvage_gen:
+                    # a tombstone rewrote a header inside this round's
+                    # range after it was posted: its wire image would
+                    # resurrect the record on a backup — never stash it
+                    # (the chain check below then drops the rest too)
+                    continue
+                if e.salvage_src is not None:
+                    # a failed salvage round: re-stash its segments with
+                    # updated ack sets (acks only ever accumulate); a
+                    # bundled fresh range contributes one trailing state
+                    # and becomes a salvageable segment of its own
+                    srcs = e.salvage_src
+                    states = e.handle.salvage_states() \
+                        if e.handle is not None else None
+                    for i, seg in enumerate(srcs):
+                        salv = states[i] if states else seg.salv
+                        dfd = list(seg.deferred)
+                        if deferred is not None:
+                            dfd.append(deferred)
+                        stash.append(_SalvageSeg(seg.end_lsn, seg.start_off,
+                                                 seg.end_off, salv, dfd,
+                                                 seg.attempts + 1))
+                    if states is not None and len(states) > len(srcs):
+                        stash.append(_SalvageSeg(
+                            e.end_lsn,
+                            srcs[-1].end_off % self.cfg.capacity,
+                            e.end_off, states[len(srcs)],
+                            [deferred] if deferred is not None else []))
+                elif e.handle is not None:
+                    for salv in e.handle.salvage_states():
+                        stash.append(_SalvageSeg(
+                            e.end_lsn, e.start_off, e.end_off, salv,
+                            [deferred] if deferred is not None else []))
+        # prepend: rounds failing now always precede any older stash.
+        # The stash is only usable if it covers the rolled-back range
+        # without a gap: a failed round that contributed nothing (fatal
+        # non-transport error, no wire round) would leave a hole that a
+        # later salvage retirement would silently mark durable — verify
+        # the chain from the issue watermark and drop everything on a
+        # mismatch (the next leader falls back to a full fresh re-issue).
+        merged = stash + self._salvage
+        pos = self._issue_off
+        chained = True
+        for s in merged:
+            if s.start_off != pos:
+                chained = False
+                break
+            pos = s.end_off % self.cfg.capacity
+        self._salvage = merged if chained else []
+        self._shrink_locked()
         self._commit_cv.notify_all()
 
-    def _raise_pipe_deferred_locked(self) -> None:
-        if self._pipe_errors:
+    def _raise_pipe_deferred_locked(self, issue: bool = False) -> None:
+        """Surface a deferred round failure.  At force-issue time
+        (``issue=True``) errors whose rounds sit in the salvage stash are
+        held back — the leader is about to retry exactly those rounds,
+        and a successful salvage voids them; drain still surfaces
+        everything (durability has NOT been achieved yet)."""
+        if not self._pipe_errors:
+            return
+        if not issue:
             raise self._pipe_errors.pop(0)
+        # an error is only "pending retry" while its segment has salvage
+        # budget left; past the limit it surfaces on the next force
+        pending = {id(exc) for seg in self._salvage
+                   if seg.attempts < _SALVAGE_RETRY_LIMIT
+                   for exc in seg.deferred}
+        for e in self._inflight:
+            # a salvage round already re-issuing those ranges: its verdict
+            # (retire clears them / failure re-stashes them) is still out
+            if e.salvage_src:
+                pending.update(id(exc) for seg in e.salvage_src
+                               for exc in seg.deferred)
+        for i, exc in enumerate(self._pipe_errors):
+            if id(exc) not in pending:
+                raise self._pipe_errors.pop(i)
 
     def _pipe_await(self, lsn: int, entry: Optional[_PipeRound],
                     deadline: Optional[float]) -> int:
@@ -780,6 +1015,18 @@ class Log:
                 self._raise_pipe_deferred_locked()
         if self.repl is not None:
             self.repl.drain(timeout=timeout, surface_errors=surface_errors)
+
+    def abandon_salvage(self) -> None:
+        """Drop the salvage stash (failed rounds awaiting re-issue).
+
+        Failover uses this (ClusterManager._drain_logs): once the old
+        primary is about to be fenced, its snapshotted wire images must
+        never reach a backup under the old epoch — the new primary
+        re-establishes the tail through quorum recovery instead.  Any
+        deferred failure stays stashed and still surfaces on the next
+        force/drain."""
+        with self._commit_cv:
+            self._salvage.clear()
 
     def append(self, data: bytes, freq: int = 1) -> int:
         """Convenience bundle of reserve+copy+complete+force (Table 2)."""
@@ -1011,33 +1258,59 @@ class Log:
             rec = self._recs.get(rec_id)
             if rec is None:
                 return 0.0
-            raw = self.dev.read(rec.off, REC_HDR_SIZE)
-            lsn, size, crc, flags = _REC_HDR.unpack(raw)
-            vns = self.dev.write(rec.off, _REC_HDR.pack(
-                lsn, size, crc, (flags | FLAG_CLEANED) & ~FLAG_VALID))
-            vns += write_and_force(self.dev, rec.off, REC_HDR_SIZE, self.repl,
-                                   self.cfg.ordering,
-                                   local_durable=self.cfg.local_durable)
-            # advance head over contiguous cleaned/pad records
-            advanced = False
-            while True:
-                head = self._recs.get(self._head_lsn)
-                if head is None:
-                    break
-                hraw = self.dev.read(head.off, REC_HDR_SIZE)
-                _, _, _, hflags = _REC_HDR.unpack(hraw)
-                reclaimable = head.pad or (hflags & FLAG_CLEANED)
-                if not reclaimable or self._head_lsn > self._durable_lsn:
-                    break
-                self._used -= head.extent
-                self._head_off = (head.off - self.ring_off + head.extent) \
-                    % self.cfg.capacity
-                del self._recs[self._head_lsn]
-                self._head_lsn += 1
-                advanced = True
-            if advanced:
-                vns += self._write_superline()
-            return vns
+            with self._commit_cv:
+                # Salvage stash segments and staged wire images only ever
+                # cover ranges ABOVE the durable watermark, so tombstoning
+                # a durable record (the normal GC path) needs no exclusion
+                # at all.  Tombstoning a not-yet-durable record is the
+                # rare case where a stale pre-tombstone image could reach
+                # a lane AFTER the tombstone and resurrect the record on a
+                # backup: serialize with the issue path then — _issue_lock
+                # keeps a leader from posting a stash it popped before the
+                # generation bump (a stuck pipeline can make this wait;
+                # the durable-record path never pays it).
+                guard = rec.lsn > self._durable_lsn
+            if not guard:
+                return self._cleanup_rec_locked(rec)
+            with self._issue_lock:
+                with self._commit_cv:
+                    # drop the stash and bump the generation so a round
+                    # posted before this tombstone can never be stashed
+                    # when it fails later (full fresh re-issue instead)
+                    self._salvage.clear()
+                    self._salvage_gen += 1
+                return self._cleanup_rec_locked(rec)
+
+    def _cleanup_rec_locked(self, rec: _Rec) -> float:
+        """Tombstone body; caller holds _alloc_lock (+ _issue_lock when
+        the record may sit inside a salvage/staged range)."""
+        raw = self.dev.read(rec.off, REC_HDR_SIZE)
+        lsn, size, crc, flags = _REC_HDR.unpack(raw)
+        vns = self.dev.write(rec.off, _REC_HDR.pack(
+            lsn, size, crc, (flags | FLAG_CLEANED) & ~FLAG_VALID))
+        vns += write_and_force(self.dev, rec.off, REC_HDR_SIZE, self.repl,
+                               self.cfg.ordering,
+                               local_durable=self.cfg.local_durable)
+        # advance head over contiguous cleaned/pad records
+        advanced = False
+        while True:
+            head = self._recs.get(self._head_lsn)
+            if head is None:
+                break
+            hraw = self.dev.read(head.off, REC_HDR_SIZE)
+            _, _, _, hflags = _REC_HDR.unpack(hraw)
+            reclaimable = head.pad or (hflags & FLAG_CLEANED)
+            if not reclaimable or self._head_lsn > self._durable_lsn:
+                break
+            self._used -= head.extent
+            self._head_off = (head.off - self.ring_off + head.extent) \
+                % self.cfg.capacity
+            del self._recs[self._head_lsn]
+            self._head_lsn += 1
+            advanced = True
+        if advanced:
+            vns += self._write_superline()
+        return vns
 
     def cleanupAll(self) -> float:
         """Reinitialize the whole log, preserving the epoch (§4.3)."""
@@ -1050,6 +1323,8 @@ class Log:
             self._durable_off = 0
             self._inflight.clear()
             self._pipe_errors.clear()
+            self._salvage.clear()
+            self._salvage_gen += 1
             self._issue_lsn = self._durable_lsn
             self._issue_off = 0
             return self._write_superline()
@@ -1316,4 +1591,9 @@ class Log:
                         complete_upto=self._complete_upto, used=self._used,
                         epoch=self._epoch, capacity=self.cfg.capacity,
                         inflight_rounds=len(self._inflight),
-                        issue_lsn=self._issue_lsn)
+                        issue_lsn=self._issue_lsn,
+                        pipeline_depth=self._depth,
+                        salvage_pending=len(self._salvage),
+                        salvage_rounds=self.salvage_rounds_total,
+                        reissue_bytes=self.reissue_bytes_total,
+                        full_reissue_bytes=self.full_reissue_bytes_total)

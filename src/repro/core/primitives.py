@@ -18,12 +18,14 @@ hardware latency alongside measured software cost.
 from __future__ import annotations
 
 import struct
+import threading
 import zlib
 from dataclasses import dataclass
-from typing import Callable, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from .pmem import CostModel, PMEMDevice
-from .transport import QuorumError, QuorumRound, ReplicationGroup
+from .transport import (QuorumError, QuorumRound, ReplicationGroup,
+                        RoundSalvage)
 
 crc32 = zlib.crc32
 
@@ -145,12 +147,21 @@ class ForceRound:
     """Handle for one issued ``write_and_force_segs_async`` round.
 
     ``wait()`` blocks until the round's write quorum settles and returns
-    the round's modelled cost.  Cost model (DESIGN.md §8): with REP_LF the
-    local flush overlaps wire time — the source ranges were DMA-snapshotted
-    at post time, so flushing no longer costs the NIC its LLC hits — and an
-    overlapped round pays ``max(wire, flush) + doorbell`` instead of the
-    serial sum.  LF_REP and PARALLEL keep their serial accounting (their
-    flush either orders before the wire or contends with it).
+    the round's modelled cost.  Cost model (DESIGN.md §8-9): a round that
+    rides the async machinery pays the doorbell issue gap, and whatever
+    genuinely overlaps is charged as a max, not a sum —
+
+      REP_LF    max(wire, flush) + doorbell   — the flush runs after the
+                post and overlaps wire time; the post-time DMA snapshot
+                keeps the NIC's LLC hits.
+      LF_REP    flush + wire + doorbell       — the ordering *requires*
+                the flush to retire before the doorbell, so the serial
+                sum is the model, not an accounting artifact.
+      PARALLEL  max(wire, flush) + contention + doorbell — flush and wire
+                race; the engine orders the flush before the post only so
+                the DMA snapshot sees the same LLC evictions the real
+                race loses (Fig. 6), but latency-wise the two overlap,
+                plus the measured read/write DIMM contention penalty.
     """
 
     round: Optional[QuorumRound]       # None => no wire work was needed
@@ -167,6 +178,13 @@ class ForceRound:
         else:
             self.round.add_done_callback(fn)
 
+    def salvage_states(self) -> List[RoundSalvage]:
+        """Re-issuable remainder(s) of this round (empty when the round
+        needed no wire work — there is nothing to salvage locally)."""
+        if self.round is None:
+            return []
+        return [self.round.salvage()]
+
     def wait(self, timeout: Optional[float] = None) -> float:
         if self.round is None:
             return self.loc_vns
@@ -174,8 +192,9 @@ class ForceRound:
         if self.ordering == REP_LF:
             return max(rep_vns, self.loc_vns) + self.issue_vns
         if self.ordering == LF_REP:
-            return self.loc_vns + rep_vns
-        return self.loc_vns + rep_vns + 0.1 * min(self.loc_vns, rep_vns)
+            return self.loc_vns + rep_vns + self.issue_vns
+        return max(rep_vns, self.loc_vns) \
+            + 0.1 * min(self.loc_vns, rep_vns) + self.issue_vns
 
 
 def write_and_force_segs_async(
@@ -223,8 +242,129 @@ def write_and_force_segs_async(
     if ordering in (LF_REP, PARALLEL):
         loc_vns = _persist_all()
         rnd = repl.replicate_batch_async(dev, segs, local_ack_vns=loc_vns)
-        return ForceRound(rnd, loc_vns, ordering=ordering)
+        return ForceRound(rnd, loc_vns, issue_vns=dev.cost.doorbell_ns,
+                          ordering=ordering)
     raise ValueError(f"unknown ordering {ordering!r}")
+
+
+# ---------------------------------------------------------------------- #
+# Partial-quorum salvage (DESIGN.md §9)
+# ---------------------------------------------------------------------- #
+class SalvageForceRound:
+    """ForceRound-compatible handle over the re-issued remainders of one
+    or more failed durability rounds, optionally bundled with the issuing
+    leader's own fresh range.
+
+    Each failed round keeps its own write-quorum arithmetic (prior acks
+    from still-live lanes are credited; only never-acked lanes get wire
+    traffic), and the combined handle settles when EVERY constituent
+    round — salvage and fresh alike — has settled: the pipelined force
+    engine retires it like any other round, so the durable watermark
+    still advances over a gapless prefix only.  Bundling the fresh range
+    into the SAME pipeline round is what makes leader progress past an
+    unresolved hole impossible: the fresh bytes cannot become durable
+    unless the salvaged bytes ahead of them do.  ``wait()`` returns the
+    max of the constituent costs (they overlap on the wire) plus the
+    doorbell gap; no local flush is charged for the salvaged ranges —
+    the failed rounds already persisted them at their original issue
+    (the fresh part pays its own flush as usual).
+    """
+
+    def __init__(self, rounds: List[QuorumRound], reissue_bytes: int,
+                 issue_vns: float = 0.0,
+                 fresh: Optional["ForceRound"] = None):
+        self.rounds = rounds
+        self.reissue_bytes = reissue_bytes
+        self.issue_vns = issue_vns
+        self.fresh = fresh
+        self._lock = threading.Lock()
+
+    def _parts(self) -> list:
+        return self.rounds + ([self.fresh] if self.fresh is not None else [])
+
+    def done(self) -> bool:
+        return all(p.done() for p in self._parts())
+
+    def add_done_callback(self, fn) -> None:
+        parts = self._parts()
+        if not parts:
+            fn()
+            return
+        remaining = [len(parts)]
+
+        def _one_settled() -> None:
+            with self._lock:
+                remaining[0] -= 1
+                last = remaining[0] == 0
+            if last:
+                fn()
+
+        for p in parts:
+            p.add_done_callback(_one_settled)
+
+    def salvage_states(self) -> List[RoundSalvage]:
+        """One state per salvaged round, plus — when a fresh range rode
+        along — one trailing state for it (the caller re-stashes that as
+        a new salvageable segment)."""
+        states = [r.salvage() for r in self.rounds]
+        if self.fresh is not None:
+            states.extend(self.fresh.salvage_states())
+        return states
+
+    def wait(self, timeout: Optional[float] = None) -> float:
+        vns = 0.0
+        for r in self.rounds:
+            vns = max(vns, r.result(timeout))
+        if self.fresh is not None:
+            vns = max(vns, self.fresh.wait(timeout))
+        return vns + self.issue_vns
+
+
+def reissue_segs(
+    dev: PMEMDevice,
+    salvages: Sequence[RoundSalvage],
+    repl: Optional[ReplicationGroup],
+    ordering: str = REP_LF,
+    local_durable: bool = True,
+    fresh_segs=None,
+) -> SalvageForceRound:
+    """Re-issue the unacked (backup × range) deltas of failed rounds.
+
+    The MOD-style minimal re-issue: instead of replaying each failed
+    round's whole range to every backup, post — per backup — only the
+    ranges that backup never acked, reusing the wire images the NIC
+    DMA-snapshotted at the original post.  Local PMEM is NOT re-flushed
+    (the original issue already persisted the range; ``local_vns``
+    credit inside each salvage carries the local ack), so a salvage
+    round leaves the primary's DeviceStats exactly where a fault-free
+    run would.
+
+    ``fresh_segs``: the issuing leader's own un-issued range, bundled
+    behind the salvage posts as one more constituent round (posted after
+    the deltas, so every FIFO lane still sees LSN order).  It goes
+    through the ordinary ``write_and_force_segs_async`` path — local
+    flush and all — exactly as it would have with no stash in front.
+    """
+    def _fresh() -> Optional[ForceRound]:
+        if not fresh_segs:
+            return None
+        return write_and_force_segs_async(dev, fresh_segs, repl, ordering,
+                                          local_durable=local_durable)
+
+    if repl is None:
+        # replication was torn down since the failure: every salvaged
+        # range is already durable locally; only the fresh part has work
+        return SalvageForceRound([], 0, fresh=_fresh())
+    repl._raise_deferred()
+    rounds: List[QuorumRound] = []
+    posted = 0
+    for salv in salvages:
+        rnd, nbytes = repl.reissue_round_async(dev, salv)
+        rounds.append(rnd)
+        posted += nbytes
+    issue_vns = dev.cost.doorbell_ns if posted else 0.0
+    return SalvageForceRound(rounds, posted, issue_vns=issue_vns,
+                             fresh=_fresh())
 
 
 # ---------------------------------------------------------------------- #

@@ -12,6 +12,7 @@ as the one-stop fixture, and the cluster manager re-wires it on failover.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -49,6 +50,42 @@ class ReplicaSet:
             if t.server.server_id == server_id:
                 t.inject(drop=True)
 
+    def kill_backup_midwire(self, server_id: str, settle_s: float = 0.02,
+                            timeout: float = 10.0) -> None:
+        """Deterministic mid-wire backup death for tests and benchmarks:
+        wait briefly so acks already on the other lanes land, fence this
+        replica set's primary at the backup (its in-flight ops fail on
+        the wire), then wait until every in-flight durability round has
+        settled.  The shared fault harness behind the salvage scenarios
+        — keep the timing dance here, not at call sites."""
+        time.sleep(settle_s)
+        for srv in self.servers:
+            if srv.server_id == server_id:
+                srv.fence(self.primary_id)
+        if self.log is not None:
+            deadline = time.monotonic() + timeout
+            while self.log.stats()["inflight_rounds"] \
+                    and time.monotonic() < deadline:
+                time.sleep(0.002)
+
+    def recover_backup(self, server_id: str) -> None:
+        """Rejoin a recovered backup (§4.2): clear failure injection,
+        reopen its transport, and re-admit the current primary (the
+        server drops its fencing of it — epoch fencing across real
+        failovers stays with ClusterManager).  The backup's device holds
+        whatever it had when it failed; the salvage path (DESIGN.md §9)
+        or quorum repair closes the gap.  The group's lanes are settled
+        first so an in-flight op from before the failure cannot land its
+        late TransportError *after* the reopen and re-evict the backup."""
+        if self.group is not None:
+            self.group.drain(surface_errors=False)
+        for t in self.transports:
+            if t.server.server_id == server_id:
+                t.reopen()
+                # re-admit only THIS path's primary: a ClusterManager
+                # epoch fence of a deposed primary must stay up
+                t.server.unfence(t.primary_id)
+
     def shutdown(self) -> None:
         if self.group:
             self.group.shutdown()
@@ -68,8 +105,15 @@ def build_replica_set(
     primary_id: str = "node0",
     open_existing: bool = False,
     pipeline_depth: int = 1,
+    adaptive_depth: bool = False,
+    salvage: bool = True,
 ) -> ReplicaSet:
-    """Construct devices + transports + group + log for one deployment."""
+    """Construct devices + transports + group + log for one deployment.
+
+    ``pipeline_depth`` is the in-flight force-round limit — with
+    ``adaptive_depth=True`` it is the CEILING of the log's adaptive
+    controller (DESIGN.md §9) instead of a static setting.  ``salvage``
+    gates partial-quorum salvage of failed rounds."""
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
     if mode == "local" and n_backups:
@@ -82,7 +126,8 @@ def build_replica_set(
         write_quorum = (n_durable // 2) + 1
     cfg = LogConfig(capacity=capacity, write_quorum=write_quorum,
                     local_durable=local_durable,
-                    pipeline_depth=pipeline_depth)
+                    pipeline_depth=pipeline_depth,
+                    adaptive_depth=adaptive_depth, salvage=salvage)
     size = device_size(capacity)
     cost = cost or CostModel()
     # remote-only staging is DRAM: model as fast device (never persisted)

@@ -58,6 +58,12 @@ class ReplicaServer:
         with self._lock:
             self._fenced.add(primary_id)
 
+    def unfence(self, primary_id: str) -> None:
+        """Re-admit ONE primary (backup rejoin after a transient fault).
+        Epoch fences of deposed primaries stay up."""
+        with self._lock:
+            self._fenced.discard(primary_id)
+
     def unfence_all(self) -> None:
         with self._lock:
             self._fenced.clear()
@@ -138,6 +144,15 @@ class Transport:
 
     def close(self) -> None:
         self._closed = True
+
+    def reopen(self) -> None:
+        """Reconnect to a recovered backup (§4.2 backup rejoin): clears
+        the eviction and any failure injection.  The server's device
+        keeps whatever it held when the connection died — the salvage
+        path (DESIGN.md §9) or quorum repair closes the gap; fencing
+        state stays with the server."""
+        self.failure = FailureSpec()
+        self._closed = False
 
     @property
     def closed(self) -> bool:
@@ -251,6 +266,27 @@ class Transport:
         return data, self.cost.rdma_rtt_ns + n * self.cost.rdma_byte_ns + remote_vns
 
 
+@dataclass
+class RoundSalvage:
+    """The re-issuable remainder of one failed quorum round (§PR-5).
+
+    Captures everything the next force leader needs to finish the round
+    without repeating work that already landed: the byte ranges the
+    round covered, which lanes acked (their copies are durable — their
+    acks are re-credited if the backup is still live), which lanes never
+    acked, and — for lanes whose doorbell was posted — the wire image
+    the NIC DMA-snapshotted at post time, so the re-issue reads nothing
+    from the device.  ``staged`` is None for a lane evicted at post time
+    (nothing was snapshotted); a re-issue to such a lane must re-snapshot.
+    """
+
+    segs: List[Tuple[int, int]]                       # ranges the round covered
+    total: int                                        # sum of range bytes
+    local_vns: Optional[float]                        # local ack credit
+    acked: List[Tuple["Transport", float]]            # lanes that acked
+    pending: List[Tuple["Transport", Optional[_StagedWrite]]]  # never acked
+
+
 class QuorumRound:
     """Handle for one issued (in-flight) quorum round.
 
@@ -263,9 +299,15 @@ class QuorumRound:
     settles — on the lane thread that settles it, or inline if already
     settled — which is what lets the log retire rounds without a
     dedicated retirement thread.
+
+    Acks carry identity: the round records *which* lane acked (and which
+    never did) alongside the vns figures, so a failed round can be
+    ``salvage()``d — re-issued as only its unacked (backup × range)
+    deltas instead of from scratch (DESIGN.md §9).
     """
 
-    def __init__(self, group: "ReplicationGroup", write_quorum: int):
+    def __init__(self, group: "ReplicationGroup", write_quorum: int,
+                 segs: Optional[Sequence[Tuple[int, int]]] = None):
         self._group = group
         self._w = write_quorum
         self._cv = threading.Condition()
@@ -274,17 +316,51 @@ class QuorumRound:
         self._sealed = False
         self._fatal: Optional[BaseException] = None
         self._callbacks: List[Callable[[], None]] = []
+        # per-lane ack identity (salvage bookkeeping)
+        self.segs: List[Tuple[int, int]] = list(segs or [])
+        self._local_vns: Optional[float] = None
+        self._fut_lane: dict = {}                 # Future -> Transport
+        self._lane_acked: List[Tuple[Transport, float]] = []
+        self._lane_pending: dict = {}             # Transport -> _StagedWrite|None
 
     # -- issue-side wiring (group only) ---------------------------------- #
     def _ack_local(self, vns: float) -> None:
+        self._local_vns = vns
         self._acks.append(vns)
 
-    def _track(self, fut: Future) -> None:
+    def _credit(self, t: "Transport", vns: float) -> None:
+        """Bank a prior ack (a lane that acked the original round and is
+        still live) without any wire traffic — with identity, so a
+        failed re-issue can itself be salvaged without losing it."""
+        with self._cv:
+            self._acks.append(vns)
+            self._lane_acked.append((t, vns))
+
+    def _note_acked(self, t: "Transport", vns: float) -> None:
+        """A lane that acked the original round but is not live now: its
+        copy exists but cannot count toward this round's quorum.  Keep
+        the identity so the credit revives if the backup rejoins before
+        a later salvage."""
+        with self._cv:
+            self._lane_acked.append((t, vns))
+
+    def _track(self, fut: Future, t: Optional["Transport"] = None,
+               staged: Optional[_StagedWrite] = None) -> None:
         with self._cv:
             self._outstanding += 1
+            if t is not None:
+                self._fut_lane[fut] = t
+                self._lane_pending[t] = staged
         # added AFTER the group's _harvest callback, so by the time
         # _on_done runs, eviction / error stashing has been applied
         fut.add_done_callback(self._on_done)
+
+    def _note_unposted(self, t: "Transport",
+                       staged: Optional[_StagedWrite] = None) -> None:
+        """A lane that failed at post time (or was already evicted): it
+        never acked and has no wire image unless one was handed over."""
+        with self._cv:
+            self._lane_pending.setdefault(t, staged)
 
     def _settled_locked(self) -> bool:
         return (len(self._acks) >= self._w
@@ -305,8 +381,13 @@ class QuorumRound:
             self._outstanding -= 1
             exc = fut.exception() if not fut.cancelled() else \
                 TransportError("lane op cancelled")
+            t = self._fut_lane.pop(fut, None)
             if exc is None:
-                self._acks.append(fut.result())
+                vns = fut.result()
+                self._acks.append(vns)
+                if t is not None:
+                    self._lane_pending.pop(t, None)
+                    self._lane_acked.append((t, vns))
             elif not isinstance(exc, TransportError) and self._fatal is None:
                 self._fatal = exc
         self._fire_if_settled()
@@ -321,6 +402,21 @@ class QuorumRound:
     def done(self) -> bool:
         with self._cv:
             return self._settled_locked()
+
+    def salvage(self) -> RoundSalvage:
+        """Snapshot the round's re-issuable remainder.
+
+        Safe to call at any time; meaningful once the round has failed
+        (an in-flight lane op still counts as *pending* — a late ack
+        just means the re-issue sends a byte-identical duplicate, which
+        the idempotent write_imm absorbs)."""
+        with self._cv:
+            return RoundSalvage(
+                segs=list(self.segs),
+                total=sum(n for _, n in self.segs),
+                local_vns=self._local_vns,
+                acked=list(self._lane_acked),
+                pending=list(self._lane_pending.items()))
 
     def add_done_callback(self, fn: Callable[[], None]) -> None:
         with self._cv:
@@ -534,7 +630,7 @@ class ReplicationGroup:
         """
         segs = list(segs)
         self._raise_deferred()
-        rnd = QuorumRound(self, self.write_quorum)
+        rnd = QuorumRound(self, self.write_quorum, segs=segs)
         if self.local_is_durable and local_ack_vns is not None:
             rnd._ack_local(local_ack_vns)
         for t in self.live_transports():
@@ -542,11 +638,65 @@ class ReplicationGroup:
                 staged = t.post_write_imm_batch(src_dev, segs)
             except TransportError:
                 t.close()        # evict, exactly as the lane harvest would
+                rnd._note_unposted(t)
                 continue
             fut = self._submit(t, lambda tt, s=staged: tt.write_imm_staged(s))
-            rnd._track(fut)
+            rnd._track(fut, t, staged)
         rnd._seal()
         return rnd
+
+    def reissue_round_async(self, src_dev: PMEMDevice, salv: RoundSalvage
+                            ) -> Tuple[QuorumRound, int]:
+        """Finish a failed round by re-issuing only its unacked
+        (backup × range) deltas (DESIGN.md §9).
+
+        Lanes that acked the original round and are live again are
+        credited without wire traffic (their copy is already durable);
+        pending lanes that are live get the wire image the NIC snapshotted
+        at the original post — no new device DMA — while a pending lane
+        with no snapshot (evicted at post time) is re-snapshotted.  The
+        caller is expected to have surfaced deferred group errors already
+        (``reissue_segs`` does).  Returns (round, bytes actually re-sent).
+        """
+        rnd = QuorumRound(self, self.write_quorum, segs=salv.segs)
+        if self.local_is_durable and salv.local_vns is not None:
+            rnd._ack_local(salv.local_vns)
+        live = set(self.live_transports())
+        for t, vns in salv.acked:
+            if t in live:
+                rnd._credit(t, vns)
+            else:
+                rnd._note_acked(t, vns)
+        # a lane the original round never reached (it was already evicted
+        # at issue time) but which is live again now: it must receive the
+        # ranges too, or a W that needs it can never fill — no snapshot
+        # exists for it, so it takes the re-snapshot path below
+        seen = {t for t, _ in salv.acked} | {t for t, _ in salv.pending}
+        pending = list(salv.pending) + [(t, None) for t in live
+                                        if t not in seen]
+        posted_bytes = 0
+        for t, staged in pending:
+            if t not in live:
+                rnd._note_unposted(t, staged)
+                continue
+            if staged is None:
+                try:
+                    staged = t.post_write_imm_batch(src_dev, salv.segs)
+                except TransportError:
+                    t.close()
+                    rnd._note_unposted(t)
+                    continue
+            else:
+                # refresh the post anchor (straggler delays count from the
+                # doorbell); the DMA snapshot and its read cost were paid
+                # at the original post — charge nothing again
+                staged = _StagedWrite(staged.datas, staged.total, 0.0,
+                                      time.monotonic())
+            fut = self._submit(t, lambda tt, s=staged: tt.write_imm_staged(s))
+            rnd._track(fut, t, staged)
+            posted_bytes += staged.total
+        rnd._seal()
+        return rnd, posted_bytes
 
     def broadcast_bytes(self, data: bytes, dst_off: int) -> float:
         """Replicate a small DRAM buffer (superline updates, epoch bumps).
