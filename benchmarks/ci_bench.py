@@ -38,13 +38,21 @@ log; every cell must end fully durable after drain, stay within its
 vulnerability bound, and the frequency policy must beat sync at high
 thread counts (the §4.4 claim).
 
+fig9 pinned workload (the ISSUE-6 acceptance configuration): 16
+concurrent producers over a replicated strict-mode log (local + 1
+backup, sync durability) — group-commit ingestion front end vs
+per-producer scalar appends.  The grouped row must sustain >= 4x the
+scalar row's records/s, report per-record p50/p99 (not batch
+averages), keep its p99 under the pinned ceiling, and recover to a
+log digest identical to a single-threaded serial reference run.
+
 Guarantees checked on every run: throughput trajectory vs the recorded
 seeds, DeviceStats identity (speedups must come from cheaper
 bookkeeping, never from skipping modelled hardware work), and — for
 fig7 — recovered-state identity between the vectorized and scalar scans.
 
 Usage:  PYTHONPATH=src python -m benchmarks.ci_bench \
-            [fig5.json] [fig7.json] [fig6.json] [fig8.json]
+            [fig5.json] [fig7.json] [fig6.json] [fig8.json] [fig9.json]
 """
 
 from __future__ import annotations
@@ -723,10 +731,83 @@ def run_fig7(out_path: str) -> list:
     return problems
 
 
+# ---------------------------------------------------------------------- #
+# fig9: pinned multi-producer ingestion workload (group commit vs scalar)
+# ---------------------------------------------------------------------- #
+ING_RATIO_FLOOR = 4.0         # grouped records/s >= 4x scalar (acceptance)
+ING_P99_CEILING_MS = 50.0     # grouped per-record p99 (generous: CI jitter)
+
+
+def run_fig9(out_path: str) -> list:
+    from benchmarks.fig9_kvstore import (ING_DEPTH, ING_OPS, ING_THREADS,
+                                         ING_WINDOW, run_ingest_axis)
+    problems = []
+    shapes = run_ingest_axis(warm=True)
+    rows = {f"fig9/ingest/{s}": r for s, r in shapes.items()}
+    grouped, scalar, serial = (shapes[s]
+                               for s in ("grouped", "scalar", "serial"))
+
+    ratio = grouped["records_per_s"] / scalar["records_per_s"]
+    if ratio < ING_RATIO_FLOOR:
+        problems.append(
+            f"fig9: grouped/scalar throughput ratio {ratio:.2f}x below "
+            f"the {ING_RATIO_FLOOR}x floor")
+    if grouped["latency_ms"]["p99"] > ING_P99_CEILING_MS:
+        problems.append(
+            f"fig9: grouped per-record p99 {grouped['latency_ms']['p99']}ms "
+            f"over the {ING_P99_CEILING_MS}ms ceiling")
+    expected = ING_THREADS * ING_OPS
+    for shape, r in shapes.items():
+        if r["records"] != expected or not r["gapless"]:
+            problems.append(
+                f"fig9/{shape}: recovered {r['records']} records "
+                f"(expected {expected}, gapless={r['gapless']})")
+        if r["digest"] != serial["digest"]:
+            problems.append(
+                f"fig9/{shape}: recovered digest {r['digest']} differs "
+                f"from the serial reference {serial['digest']}")
+    eng = grouped["engine"]
+    if not (eng["submitted"] == eng["acked"] == expected
+            and eng["failed"] == 0):
+        problems.append(
+            f"fig9: engine accounting off — submitted {eng['submitted']} "
+            f"acked {eng['acked']} failed {eng['failed']}")
+
+    doc = dict(
+        meta=dict(
+            workload=dict(producers=ING_THREADS, ops_per_producer=ING_OPS,
+                          window=ING_WINDOW, pipeline_depth=ING_DEPTH,
+                          mode="local+remote", n_backups=1,
+                          device_mode="strict", durability="sync"),
+            acceptance=dict(
+                ratio_floor=ING_RATIO_FLOOR,
+                grouped_vs_scalar_ratio=round(ratio, 2),
+                grouped_p99_ms=grouped["latency_ms"]["p99"],
+                p99_ceiling_ms=ING_P99_CEILING_MS,
+                digest_identical_to_serial=bool(
+                    grouped["digest"] == scalar["digest"]
+                    == serial["digest"]),
+                passed=not problems),
+        ),
+        rows=rows,
+    )
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    for name, r in sorted(rows.items()):
+        print(f"{name}: {r['records_per_s']:.0f} rec/s "
+              f"p50={r['latency_ms']['p50']}ms p99={r['latency_ms']['p99']}ms "
+              f"digest={r['digest']}")
+    print(f"fig9 grouped/scalar ratio: {ratio:.2f}x")
+    print(f"wrote {out_path}")
+    return problems
+
+
 def main(out_path: str = "BENCH_fig5.json",
          fig7_path: str = "BENCH_fig7.json",
          fig6_path: str = "BENCH_fig6.json",
-         fig8_path: str = "BENCH_fig8.json") -> int:
+         fig8_path: str = "BENCH_fig8.json",
+         fig9_path: str = "BENCH_fig9.json") -> int:
     _warm()
     current = {}
     for mode in ("strict", "fast"):
@@ -779,6 +860,7 @@ def main(out_path: str = "BENCH_fig5.json",
     problems += run_fig7(fig7_path)
     problems += run_fig6(fig6_path)
     problems += run_fig8(fig8_path)
+    problems += run_fig9(fig9_path)
     for p in problems:
         print("PROBLEM:", p)
     return 1 if problems else 0

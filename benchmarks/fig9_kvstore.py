@@ -3,21 +3,44 @@
 Durable puts through each WAL backend: Arcadia local (fine-grained
 interface + freq policy), Arcadia local+remote (1 backup), FLEX, PMDK.
 Sequential vs random key order, 8 writer threads.
+
+Ingestion axis (DESIGN.md §10, pinned by ci_bench as BENCH_fig9.json):
+16 concurrent producers over a replicated strict-mode log, group-commit
+front end vs per-producer scalar appends under the SAME durability
+policy (sync: every record quorum-durable before its ack).  Reports
+per-record submit→durable-ack percentiles — not batch averages — and a
+recovered-log digest that must match a single-threaded serial
+reference run.
 """
 
 from __future__ import annotations
 
+import threading
+import time
+import zlib
+from collections import deque
+
 import numpy as np
 
-from repro.apps.kvstore import BaselineKV, DurableKV
+from repro.apps.kvstore import BaselineKV, DurableKV, encode_put
 from repro.core import Log, LogConfig, PMEMDevice, make_policy
 from repro.core.baselines import FlexLog, PMDKLog
+from repro.core.force_policy import SyncPolicy
+from repro.core.ingest import IngestConfig, latency_percentiles
 from repro.core.replication import build_replica_set, device_size
 
 from .common import emit, threaded_ops_per_s
 
 CAP = 1 << 24
 VAL = b"v" * 100
+
+# -- ingestion axis (the ISSUE-6 acceptance configuration) ------------- #
+ING_CAP = 1 << 22
+ING_THREADS = 16              # concurrent producers
+ING_OPS = 200                 # records per producer
+ING_WINDOW = 16               # grouped producers: bounded outstanding acks
+ING_DEPTH = 4                 # grouped pipeline depth (scalar stays at 1)
+ING_VAL = b"v" * 100
 
 
 def _arcadia(backups=0):
@@ -36,6 +59,119 @@ def _keys(order: str, n: int):
     rng = np.random.default_rng(0)
     return [f"key{rng.integers(0, 1 << 30):08d}".encode()
             for _ in range(n)]
+
+
+def _ing_keys():
+    return [[f"k{t:02d}-{i:04d}".encode() for i in range(ING_OPS)]
+            for t in range(ING_THREADS)]
+
+
+def _ing_digest(primary_dev) -> dict:
+    """Order-independent digest of the recovered log: the multiset of
+    payloads must be interleaving-invariant, so digest the *sorted*
+    payload list.  Also checks the LSN sequence is gapless."""
+    relog = Log.open(primary_dev, LogConfig(capacity=ING_CAP))
+    payloads = []
+    lsns = []
+    for lsn, p in relog.iter_records():
+        lsns.append(lsn)
+        payloads.append(bytes(p))
+    digest = 0
+    for p in sorted(payloads):
+        digest = zlib.crc32(p, digest)
+    gapless = lsns == list(range(lsns[0], lsns[0] + len(lsns))) \
+        if lsns else True
+    return dict(digest=digest, records=len(payloads), gapless=gapless)
+
+
+def ingest_run(shape: str) -> dict:
+    """One ingestion-axis row.  ``shape``:
+
+      grouped — 16 producers through the group-commit front end, each
+                keeping up to ING_WINDOW submissions outstanding (every
+                record still individually acked at its durable
+                watermark; the window is the client-side pipelining any
+                real WAL client does).
+      scalar  — 16 producers, per-producer blocking appends (each pays
+                its own reserve/complete/force round).
+      serial  — single thread, scalar path: the digest reference.
+
+    Same durability policy everywhere: sync (ack == quorum durable).
+    """
+    grouped = shape == "grouped"
+    n_threads = 1 if shape == "serial" else ING_THREADS
+    rs = build_replica_set(mode="local+remote", capacity=ING_CAP,
+                           n_backups=1, device_mode="strict",
+                           pipeline_depth=ING_DEPTH if grouped else 1)
+    kv = DurableKV(rs.log, SyncPolicy(),
+                   ingest=IngestConfig() if grouped else None)
+    keys = _ing_keys()
+    lat: list = []
+    lat_lock = threading.Lock()
+    barrier = threading.Barrier(n_threads + 1)
+
+    def producer(tid: int) -> None:
+        barrier.wait()
+        if grouped:
+            pend: deque = deque()
+            for k in keys[tid]:
+                pend.append(kv.put_async(k, ING_VAL))
+                if len(pend) >= ING_WINDOW:
+                    pend.popleft().wait()
+            while pend:
+                pend.popleft().wait()
+        else:
+            mine = []
+            if shape == "serial":
+                work = [k for ks in keys for k in ks]
+            else:
+                work = keys[tid]
+            for k in work:
+                t0 = time.monotonic()
+                kv.put(k, ING_VAL)
+                mine.append(time.monotonic() - t0)
+            with lat_lock:
+                lat.extend(mine)
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for th in threads:
+        th.join()
+    kv.flush()
+    dt = time.perf_counter() - t0
+    total = ING_THREADS * ING_OPS
+    row = dict(shape=shape, producers=n_threads, records=total,
+               records_per_s=round(total / dt, 1),
+               wall_ms=round(dt * 1e3, 2))
+    if grouped:
+        lat = kv.ingest.latencies()
+        row["engine"] = kv.ingest.stats()
+        row["window"] = ING_WINDOW
+    pct = latency_percentiles(lat)
+    row["latency_ms"] = {k: round(v * 1e3, 3) for k, v in pct.items()}
+    kv.close()
+    rs.shutdown()
+    row.update(_ing_digest(rs.primary_dev))
+    return row
+
+
+def run_ingest_axis(warm: bool = True) -> dict:
+    """All three shapes, warmed: returns {shape: row}.  ci_bench pins
+    the contracts (ratio, p99, digest identity) on this dict."""
+    if warm:
+        saved = globals()["ING_OPS"]
+        try:
+            globals()["ING_OPS"] = 25
+            for shape in ("grouped", "scalar"):
+                ingest_run(shape)
+        finally:
+            globals()["ING_OPS"] = saved
+    return {shape: ingest_run(shape)
+            for shape in ("grouped", "scalar", "serial")}
 
 
 def run(quick: bool = False):
@@ -64,6 +200,12 @@ def run(quick: bool = False):
                 kv.flush()
             emit(f"fig9/kvstore/{order}/{name}", 1e6 / tput,
                  f"ops_s={tput:.0f}")
+    for shape, row in run_ingest_axis(warm=not quick).items():
+        lat = row["latency_ms"]
+        emit(f"fig9/ingest/{shape}", 1e6 / row["records_per_s"],
+             f"ops_s={row['records_per_s']:.0f} p50ms={lat['p50']} "
+             f"p99ms={lat['p99']} p999ms={lat['p999']} "
+             f"digest={row['digest']}")
 
 
 if __name__ == "__main__":

@@ -13,9 +13,10 @@ from __future__ import annotations
 
 import struct
 import threading
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 from ..core.force_policy import ForcePolicy, SyncPolicy
+from ..core.ingest import IngestConfig, IngestEngine, IngestTicket
 from ..core.log import Log
 
 _REC = struct.Struct("<II")      # key_len, val_len
@@ -34,13 +35,34 @@ def decode_put(payload: bytes) -> Tuple[bytes, bytes]:
 class DurableKV:
     """KV store over the Arcadia log (fine-grained write path)."""
 
-    def __init__(self, log: Log, policy: Optional[ForcePolicy] = None):
+    def __init__(self, log: Log, policy: Optional[ForcePolicy] = None,
+                 ingest: Union[None, bool, IngestConfig,
+                               IngestEngine] = None):
+        """``ingest`` switches the write path to the group-commit
+        ingestion front end (DESIGN.md §10): pass True, an
+        IngestConfig, or a prebuilt IngestEngine.  put() then submits
+        to the engine's bounded queue and blocks until its record's
+        durable ack — concurrent put()s from many threads coalesce
+        into one batched reserve/complete and shared pipeline rounds,
+        instead of each paying its own."""
         self.log = log
         self.policy = policy or SyncPolicy()
+        self.ingest: Optional[IngestEngine] = None
+        if ingest:
+            if isinstance(ingest, IngestEngine):
+                self.ingest = ingest
+            else:
+                cfg = ingest if isinstance(ingest, IngestConfig) else None
+                self.ingest = IngestEngine(log, cfg=cfg, policy=self.policy)
         self._table: Dict[bytes, bytes] = {}
         self._lock = threading.Lock()
 
     def put(self, key: bytes, val: bytes) -> int:
+        if self.ingest is not None:
+            lsn = self.ingest.append(encode_put(key, val)).wait()
+            with self._lock:
+                self._table[key] = val
+            return lsn
         payload = encode_put(key, val)
         rid, ptr = self.log.reserve(len(payload))
         if ptr is not None:
@@ -52,6 +74,19 @@ class DurableKV:
         with self._lock:
             self._table[key] = val
         return rid
+
+    def put_async(self, key: bytes, val: bytes) -> IngestTicket:
+        """Group-commit path only: submit and return the IngestTicket
+        without waiting for the durable ack.  The table is applied
+        immediately — the same apply-before-durable exposure a freq
+        policy already gives the scalar path; wait on the ticket (or
+        flush) for the durability point."""
+        if self.ingest is None:
+            raise ValueError("put_async requires the ingest front end")
+        t = self.ingest.append(encode_put(key, val))
+        with self._lock:
+            self._table[key] = val
+        return t
 
     def put_many(self, items: Iterable[Tuple[bytes, bytes]]) -> List[int]:
         """Batched WAL path: one reserve_batch / complete_batch round and
@@ -83,8 +118,17 @@ class DurableKV:
         pipelined force engine to empty: on return every put is durable
         on a write quorum, or the round failure (QuorumError — including
         one deferred by a non-blocking ``wait=False`` policy) has been
-        raised here."""
+        raised here.  On the group-commit path this drains the ingest
+        engine: every outstanding ticket is acked or failed first."""
+        if self.ingest is not None:
+            self.ingest.drain()
+            return
         self.policy.drain(self.log)
+
+    def close(self) -> None:
+        """Shut down the ingest front end (no-op on the scalar path)."""
+        if self.ingest is not None:
+            self.ingest.close()
 
     @classmethod
     def recover(cls, log: Log, policy: Optional[ForcePolicy] = None

@@ -18,10 +18,13 @@ from .primitives import (AtomicRegion, ForceRound, IntegrityRegion, LF_REP,
                          ORDERINGS, PARALLEL, REP_LF, SalvageForceRound,
                          persist, reissue_segs, write_and_force,
                          write_and_force_segs, write_and_force_segs_async)
-from .log import (Batch, CorruptLogError, Log, LogConfig, LogError,
-                  LogFullError, Superline)
+from .log import (AckRateEstimator, Batch, CorruptLogError, Log, LogConfig,
+                  LogError, LogFullError, Superline)
 from .force_policy import (ForcePolicy, FreqPolicy, GroupCommitPolicy,
                            SyncPolicy, make_policy)
+from .ingest import (IngestClosedError, IngestConfig, IngestEngine,
+                     IngestError, IngestQueueFull, IngestShedError,
+                     IngestTicket, latency_percentiles)
 from .transport import (QuorumError, QuorumRound, ReplicaServer,
                         ReplicationGroup, RoundSalvage, Transport,
                         TransportError)
@@ -35,10 +38,13 @@ __all__ = [
     "AtomicRegion", "ForceRound", "IntegrityRegion", "LF_REP", "ORDERINGS",
     "PARALLEL", "REP_LF", "SalvageForceRound", "persist", "reissue_segs",
     "write_and_force", "write_and_force_segs", "write_and_force_segs_async",
-    "Batch", "CorruptLogError", "Log", "LogConfig", "LogError",
-    "LogFullError", "Superline",
+    "AckRateEstimator", "Batch", "CorruptLogError", "Log", "LogConfig",
+    "LogError", "LogFullError", "Superline",
     "ForcePolicy", "FreqPolicy", "GroupCommitPolicy", "SyncPolicy",
     "make_policy",
+    "IngestClosedError", "IngestConfig", "IngestEngine", "IngestError",
+    "IngestQueueFull", "IngestShedError", "IngestTicket",
+    "latency_percentiles",
     "QuorumError", "QuorumRound", "ReplicaServer", "ReplicationGroup",
     "RoundSalvage", "Transport", "TransportError",
     "ReplicaSet", "build_replica_set", "device_size",

@@ -31,6 +31,7 @@ pipeline to empty, and surfaces deferred round errors.
 
 from __future__ import annotations
 
+import copy
 import threading
 from typing import List, Optional
 
@@ -42,6 +43,19 @@ class ForcePolicy:
 
     def __init__(self, wait: bool = True):
         self.wait = bool(wait)
+
+    def nonblocking(self) -> "ForcePolicy":
+        """This policy with ``wait=False`` (self if already non-blocking):
+        leaders only *issue* rounds into the pipelined force engine.  The
+        ingestion front end (DESIGN.md §10) forces through this so that
+        slicing a big wave actually lands the slices in successive
+        pipeline slots — producers get their blocking semantics from the
+        durable ack, not from the force call."""
+        if not self.wait:
+            return self
+        clone = copy.copy(self)
+        clone.wait = False
+        return clone
 
     def on_complete(self, log: Log, rec_id: int) -> None:
         raise NotImplementedError

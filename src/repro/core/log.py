@@ -41,10 +41,12 @@ truncation.
 
 from __future__ import annotations
 
+import math
 import struct
 import threading
 import time
 import zlib
+from bisect import bisect_left
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, Iterator, List, Optional, Tuple
@@ -228,6 +230,7 @@ class _PipeRound:
     waiters: int = 0
     salvage_src: Optional[List[_SalvageSeg]] = None
     gen: int = 0          # salvage generation at issue (tombstone guard)
+    issued_at: float = 0.0  # monotonic issue stamp (ack-rate estimator)
 
 
 @dataclass(slots=True)
@@ -315,6 +318,58 @@ def _first_bad_payload(raw: bytes, items) -> Optional[int]:
     return bad
 
 
+class AckRateEstimator:
+    """Ack-rate (bandwidth-delay) grow signal for the adaptive depth
+    controller (DESIGN.md §9-10).
+
+    Two EMAs: round latency L (issue → retire) and leader arrival gap
+    G — arrivals are stamped BEFORE any pipeline-slot wait, so a
+    congested pipeline cannot masquerade demand as service time.
+    ``ceil(L / G)`` is the bandwidth-delay product in rounds: how many
+    rounds the wire absorbs at the offered leader rate.  The controller
+    grows only while that product is at least the current depth — a
+    saturated pipeline issues one round per L/depth so its BDP *equals*
+    its depth (grow), while a service-matched closed loop (one blocking
+    producer, G ≈ L) reports BDP 1 and adding slots is vetoed.  The
+    pre-PR6 signal ("grow whenever a leader finds the pipeline full")
+    grew in both cases; it survives only as the bootstrap before the
+    first retirement has been observed.
+    """
+
+    __slots__ = ("alpha", "lat_ema", "gap_ema", "last_arrival")
+
+    def __init__(self, alpha: float = 0.5):
+        self.alpha = float(alpha)
+        self.lat_ema: Optional[float] = None   # round latency (s)
+        self.gap_ema: Optional[float] = None   # leader arrival gap (s)
+        self.last_arrival: Optional[float] = None
+
+    def _mix(self, ema: Optional[float], x: float) -> float:
+        return x if ema is None else self.alpha * x + (1 - self.alpha) * ema
+
+    def observe_arrival(self, now: float) -> None:
+        """A force leader wants to issue (stamped pre-slot-wait)."""
+        if self.last_arrival is not None:
+            self.gap_ema = self._mix(self.gap_ema,
+                                     max(now - self.last_arrival, 0.0))
+        self.last_arrival = now
+
+    def observe_retire(self, now: float, issued_at: float) -> None:
+        """A round retired ``now`` that was issued at ``issued_at``."""
+        self.lat_ema = self._mix(self.lat_ema, max(now - issued_at, 0.0))
+
+    def bdp_rounds(self) -> Optional[int]:
+        """Estimated bandwidth-delay product in rounds (None until both
+        a retirement and an arrival gap have been observed)."""
+        if self.lat_ema is None or self.gap_ema is None:
+            return None
+        return max(1, math.ceil(self.lat_ema / max(self.gap_ema, 1e-9)))
+
+    def supports_growth(self, depth: int) -> bool:
+        bdp = self.bdp_rounds()
+        return True if bdp is None else bdp >= depth
+
+
 class LogError(Exception):
     pass
 
@@ -351,6 +406,11 @@ class LogConfig:
     # re-issues only what never acked; False = the PR-4 behavior (the
     # whole failed range is re-issued from scratch)
     salvage: bool = True
+    # cap on the wire-image bytes the salvage stash may pin during a
+    # long outage; the OLDEST segments' staged images spill first (their
+    # re-issue re-snapshots the ranges from the primary device instead).
+    # None = unbounded.  Spills are counted in Log.stats().
+    salvage_stash_cap: Optional[int] = None
 
 
 @dataclass
@@ -436,6 +496,8 @@ class Log:
         self.salvage_rounds_total = 0     # salvage rounds issued
         self.reissue_bytes_total = 0      # wire bytes actually re-sent
         self.full_reissue_bytes_total = 0  # counterfactual: full re-issue
+        self.salvage_spilled_bytes = 0    # stash-cap spills (wire-image
+        self.salvage_spilled_images = 0   # bytes / lane images dropped)
         # adaptive depth controller (DESIGN.md §9): cfg.pipeline_depth is
         # the ceiling; _depth is the effective in-flight limit
         self._depth = 1 if cfg.adaptive_depth else cfg.pipeline_depth
@@ -444,6 +506,16 @@ class Log:
         self._issue_seq = 0           # rounds issued (trajectory x-axis)
         self.depth_trajectory: List[Tuple[int, int]] = [(0, self._depth)]
         self.depth_trajectory_dropped = 0   # transitions beyond the cap
+        # ack-rate (bandwidth-delay) grow signal for the controller
+        self._ack_est = AckRateEstimator()
+        # per-round durable-ack timestamps: one (end_lsn, wall) entry per
+        # retirement, contiguous over the durable prefix, so
+        # durable_ack_time() resolves any LSN to the moment its covering
+        # round retired — record-level latency truth for batched appends
+        # and the ingestion front end (DESIGN.md §10)
+        self._ack_ends: List[int] = []
+        self._ack_wall: List[float] = []
+        self._ack_base = 0            # LSNs <= this have no recorded time
         self._epoch = 1
         self._head_lsn = 1
         self._head_off = 0
@@ -623,6 +695,60 @@ class Log:
         with self._commit_cv:
             return self._depth
 
+    @property
+    def pipeline_free(self) -> bool:
+        """True when the force engine could issue another round right
+        now (pipeline not full at the controller's current depth) — the
+        ingestion collector's slot-free flush trigger (DESIGN.md §10)."""
+        with self._commit_cv:
+            return len(self._inflight) < self._depth
+
+    def wait_durable_change(self, last_seen: int,
+                            timeout: Optional[float] = None) -> int:
+        """Block until the durable watermark differs from ``last_seen``
+        (or timeout); returns the current watermark.  The ingestion
+        front end's acker thread parks here instead of polling."""
+        with self._commit_cv:
+            self._commit_cv.wait_for(
+                lambda: self._durable_lsn != last_seen, timeout=timeout)
+            return self._durable_lsn
+
+    # bound on the per-round ack-timestamp history; a lookup past the
+    # trimmed horizon returns None and callers fall back to "now"
+    _ACK_LOG_CAP = 1 << 15
+
+    def _record_ack_locked(self, end_lsn: int, now: float) -> None:
+        self._ack_ends.append(end_lsn)
+        self._ack_wall.append(now)
+        if len(self._ack_ends) > self._ACK_LOG_CAP:
+            drop = self._ACK_LOG_CAP // 2
+            self._ack_base = self._ack_ends[drop - 1]
+            del self._ack_ends[:drop]
+            del self._ack_wall[:drop]
+
+    def durable_ack_time(self, lsn: int) -> Optional[float]:
+        """The wall moment (time.monotonic domain) the round covering
+        ``lsn`` retired — i.e. when a producer of that record could
+        first have been acked durable.  None if the LSN is not durable
+        yet, predates this process, or aged out of the history."""
+        with self._commit_cv:
+            return self._ack_time_locked(lsn)
+
+    def _ack_time_locked(self, lsn: int) -> Optional[float]:
+        if lsn <= self._ack_base or lsn > self._durable_lsn:
+            return None
+        i = bisect_left(self._ack_ends, lsn)
+        if i == len(self._ack_ends):
+            return None
+        return self._ack_wall[i]
+
+    def durable_ack_times(self, lsns: List[int]) -> List[Optional[float]]:
+        """Bulk durable_ack_time: one lock acquisition for a whole wave
+        (the ingestion acker stamps every ticket of a retired round in
+        one pass)."""
+        with self._commit_cv:
+            return [self._ack_time_locked(l) for l in lsns]
+
     # a flapping backup can oscillate the controller indefinitely; the
     # trajectory is an observability aid, not a ledger — cap it
     _DEPTH_TRAJECTORY_CAP = 4096
@@ -634,13 +760,18 @@ class Log:
         self.depth_trajectory.append((self._issue_seq, self._depth))
 
     def _maybe_grow_locked(self) -> None:
-        """Grow the effective depth when posts outpace retirements: a
-        leader arrives while the pipeline is full.  Growth is gated, after
-        a failure, on a clean window of retirements (DESIGN.md §9)."""
+        """Grow the effective depth when a leader arrives while the
+        pipeline is full AND the ack-rate estimator's bandwidth-delay
+        product says another slot would actually be absorbed (PR 6 —
+        fullness alone used to suffice, which also grew service-matched
+        closed loops that gain nothing from extra slots).  Growth is
+        gated, after a failure, on a clean window of retirements
+        (DESIGN.md §9)."""
         if (self.cfg.adaptive_depth
                 and len(self._inflight) >= self._depth
                 and self._depth < self.cfg.pipeline_depth
-                and self._clean_retires >= self._grow_after):
+                and self._clean_retires >= self._grow_after
+                and self._ack_est.supports_growth(self._depth)):
             self._depth += 1
             self._record_depth_locked()
 
@@ -742,6 +873,9 @@ class Log:
                 if self._issue_lsn >= lsn:
                     return self._covering_round_locked(lsn)
                 self._raise_pipe_deferred_locked(issue=True)
+                # demand stamp BEFORE the slot wait: a congested pipeline
+                # must not dilate the estimator's arrival gaps
+                self._ack_est.observe_arrival(time.monotonic())
                 self._maybe_grow_locked()
                 ok = self._commit_cv.wait_for(
                     lambda: len(self._inflight) < self._depth
@@ -773,13 +907,15 @@ class Log:
                         fresh_segs = self._range_segs(fresh_start, end_off)
                     entry = _PipeRound(end_lsn, start_off, end_off,
                                        salvage_src=salvage,
-                                       gen=self._salvage_gen)
+                                       gen=self._salvage_gen,
+                                       issued_at=time.monotonic())
                 else:
                     start_off = self._issue_off
                     rec = self._recs[lsn]
                     end_off = (rec.off - self.ring_off) + rec.extent
                     entry = _PipeRound(lsn, start_off, end_off,
-                                       gen=self._salvage_gen)
+                                       gen=self._salvage_gen,
+                                       issued_at=time.monotonic())
                 self._inflight.append(entry)
                 self._issue_lsn = entry.end_lsn
                 self._issue_off = entry.end_off % self.cfg.capacity
@@ -831,10 +967,13 @@ class Log:
                     self._pipe_fail_locked(entry, exc)
                     break
                 self._inflight.popleft()
+                now = time.monotonic()
                 self._durable_lsn = entry.end_lsn
                 self._durable_off = entry.end_off % self.cfg.capacity
                 self.force_vns_total += vns
                 self._clean_retires += 1
+                self._ack_est.observe_retire(now, entry.issued_at)
+                self._record_ack_locked(entry.end_lsn, now)
                 if entry.salvage_src:
                     # the salvaged ranges reached their write quorum after
                     # all: durability was achieved, so the failures that
@@ -933,8 +1072,38 @@ class Log:
                 break
             pos = s.end_off % self.cfg.capacity
         self._salvage = merged if chained else []
+        self._enforce_stash_cap_locked()
         self._shrink_locked()
         self._commit_cv.notify_all()
+
+    def _enforce_stash_cap_locked(self) -> None:
+        """Bound the wire-image bytes the salvage stash pins during an
+        outage (LogConfig.salvage_stash_cap).  Spills OLDEST-first: the
+        front (lowest-LSN) segments have been unresolved longest.  Only
+        the held _StagedWrite images are dropped — the segment's chain
+        metadata and ack credits survive, and a None-staged lane is
+        re-snapshotted from the primary device at re-issue time (correct
+        even across a tombstone: the re-read sees current media bytes).
+        The price is a fresh DMA read and a full-range re-send for the
+        spilled lanes, accounted in salvage_spilled_*."""
+        cap = self.cfg.salvage_stash_cap
+        if cap is None or not self._salvage:
+            return
+        held = sum(st.total for seg in self._salvage
+                   for _, st in seg.salv.pending if st is not None)
+        for seg in self._salvage:
+            if held <= cap:
+                return
+            pend = seg.salv.pending
+            for j, (t, st) in enumerate(pend):
+                if st is None:
+                    continue
+                pend[j] = (t, None)
+                held -= st.total
+                self.salvage_spilled_images += 1
+                self.salvage_spilled_bytes += st.total
+                if held <= cap:
+                    return
 
     def _raise_pipe_deferred_locked(self, issue: bool = False) -> None:
         """Surface a deferred round failure.  At force-issue time
@@ -1039,9 +1208,13 @@ class Log:
         self.force(rec_id, freq=freq)
         return rec_id
 
-    def append_timed(self, data: bytes, freq: int = 1
-                     ) -> Tuple[int, float]:
-        """append + modelled hardware ns (benchmark instrumentation)."""
+    def append_timed(self, data: bytes, freq: int = 1,
+                     per_record: bool = False):
+        """append + modelled hardware ns (benchmark instrumentation).
+
+        With ``per_record=True`` also returns the record's durable-ack
+        wall timestamp (``durable_ack_time``; None while a freq policy
+        left it unforced) as a third element."""
         v0 = self.force_vns_total
         rec_id, view = self.reserve(len(data))
         vns = 0.0
@@ -1054,6 +1227,8 @@ class Log:
         self.force(rec_id, freq=freq)
         with self._commit_cv:
             vns += self.force_vns_total - v0
+        if per_record:
+            return rec_id, vns, self.durable_ack_time(rec_id)
         return rec_id, vns
 
     # ------------------------------------------------------------------ #
@@ -1211,9 +1386,17 @@ class Log:
         self.force_batch(batch, freq=freq)
         return batch.lsns
 
-    def append_batch_timed(self, payloads: List[bytes], freq: int = 1
-                           ) -> Tuple[List[int], float]:
-        """append_batch + modelled hardware ns (benchmark instrumentation)."""
+    def append_batch_timed(self, payloads: List[bytes], freq: int = 1,
+                           per_record: bool = False):
+        """append_batch + modelled hardware ns (benchmark instrumentation).
+
+        With ``per_record=True`` also returns one durable-ack wall
+        timestamp PER RECORD (``durable_ack_time``) as a third element:
+        each member is stamped with the retirement of its own covering
+        round, not a batch average — members that landed in different
+        pipeline rounds carry different stamps, and members a freq
+        policy left unforced carry None.  This is what makes batch p99
+        claims record-level truth."""
         v0 = self.force_vns_total
         batch = self.reserve_batch([len(p) for p in payloads])
         vns = self.copy_batch(batch, payloads)
@@ -1221,6 +1404,9 @@ class Log:
         self.force_batch(batch, freq=freq)
         with self._commit_cv:
             vns += self.force_vns_total - v0
+        if per_record:
+            return batch.lsns, vns, \
+                [self.durable_ack_time(l) for l in batch.lsns]
         return batch.lsns, vns
 
     # observability ------------------------------------------------------ #
@@ -1543,6 +1729,9 @@ class Log:
         self._durable_off = tail
         self._issue_lsn = self._durable_lsn
         self._issue_off = tail
+        # recovered records were acked in a previous life: no wall
+        # timestamps exist for them in this process
+        self._ack_base = self._durable_lsn
 
     def iter_records(self) -> Iterator[Tuple[int, bytes]]:
         """Recovery iterator: yields (lsn, payload) for every live record
@@ -1596,4 +1785,11 @@ class Log:
                         salvage_pending=len(self._salvage),
                         salvage_rounds=self.salvage_rounds_total,
                         reissue_bytes=self.reissue_bytes_total,
-                        full_reissue_bytes=self.full_reissue_bytes_total)
+                        full_reissue_bytes=self.full_reissue_bytes_total,
+                        salvage_stash_bytes=sum(
+                            st.total for seg in self._salvage
+                            for _, st in seg.salv.pending if st is not None),
+                        salvage_stash_cap=self.cfg.salvage_stash_cap,
+                        salvage_spilled_bytes=self.salvage_spilled_bytes,
+                        salvage_spilled_images=self.salvage_spilled_images,
+                        depth_bdp=self._ack_est.bdp_rounds())

@@ -16,6 +16,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from .force_policy import ForcePolicy
+from .ingest import IngestConfig, IngestEngine
 from .log import Log, LogConfig, ring_offset
 from .pmem import CostModel, PMEMDevice
 from .transport import ReplicaServer, ReplicationGroup, Transport
@@ -33,6 +35,7 @@ class ReplicaSet:
     transports: List[Transport] = field(default_factory=list)
     group: Optional[ReplicationGroup] = None
     log: Optional[Log] = None
+    ingest: Optional[IngestEngine] = None
 
     @property
     def n_durable(self) -> int:
@@ -86,7 +89,19 @@ class ReplicaSet:
                 # epoch fence of a deposed primary must stay up
                 t.server.unfence(t.primary_id)
 
+    def attach_ingest(self, cfg: Optional[IngestConfig] = None,
+                      policy: Optional[ForcePolicy] = None) -> IngestEngine:
+        """Build (once) the group-commit ingestion front end (DESIGN.md
+        §10) over this set's log.  shutdown() closes it before tearing
+        down the lanes so producers never hang on a dead replica set."""
+        if self.ingest is None:
+            self.ingest = IngestEngine(self.log, cfg=cfg, policy=policy)
+        return self.ingest
+
     def shutdown(self) -> None:
+        if self.ingest is not None:
+            self.ingest.close()
+            self.ingest = None
         if self.group:
             self.group.shutdown()
 
@@ -107,13 +122,15 @@ def build_replica_set(
     pipeline_depth: int = 1,
     adaptive_depth: bool = False,
     salvage: bool = True,
+    ingest: Optional[IngestConfig] = None,
 ) -> ReplicaSet:
     """Construct devices + transports + group + log for one deployment.
 
     ``pipeline_depth`` is the in-flight force-round limit — with
     ``adaptive_depth=True`` it is the CEILING of the log's adaptive
     controller (DESIGN.md §9) instead of a static setting.  ``salvage``
-    gates partial-quorum salvage of failed rounds."""
+    gates partial-quorum salvage of failed rounds.  ``ingest`` attaches
+    the group-commit ingestion front end with the given config."""
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
     if mode == "local" and n_backups:
@@ -150,4 +167,6 @@ def build_replica_set(
                     transports=transports, group=group)
     rs.log = (Log.open if open_existing else Log.create)(
         primary_dev, cfg, repl=group)
+    if ingest is not None:
+        rs.attach_ingest(cfg=ingest)
     return rs

@@ -339,6 +339,58 @@ def test_cleanup_drops_salvage_stash():
     rs.shutdown()
 
 
+def test_salvage_stash_cap_spills_oldest_and_content_survives():
+    """PR-6 satellite: LogConfig.salvage_stash_cap bounds the wire-image
+    bytes a long outage can pin.  Spilled lanes lose only their staged
+    images (oldest-first) — chain metadata and ack credits survive, the
+    re-issue re-snapshots from the primary device, and the final content
+    is identical to the uncapped run.  The price is honest: the capped
+    run re-sends at least as many wire bytes."""
+    final = {}
+    stats = {}
+    for cap in (None, 1):                   # 1 byte: spill every image
+        rs = _rs()
+        log, pol = rs.log, FreqPolicy(2, wait=False)
+        log.cfg.salvage_stash_cap = cap
+        _fail_midwire_then_recover(rs, log, pol, n_before=8, n_after=4)
+        pol.drain(log)
+        st = log.stats()
+        assert st["salvage_stash_cap"] == cap
+        relog = Log.open(rs.primary_dev, LogConfig(capacity=CAP))
+        final[cap] = (log.durable_lsn, dict(relog.iter_records()))
+        stats[cap] = st
+        rs.group.drain()
+        rs.shutdown()
+    assert final[1] == final[None]          # a cap never changes content
+    assert stats[None]["salvage_spilled_images"] == 0
+    assert stats[1]["salvage_spilled_images"] > 0
+    assert stats[1]["salvage_spilled_bytes"] > 0
+    assert stats[1]["reissue_bytes"] >= stats[None]["reissue_bytes"]
+
+
+def test_salvage_stash_bytes_surfaced_and_bounded_by_cap():
+    """While a failed round sits stashed, Log.stats() reports the held
+    wire-image bytes; with a cap they stay at or below it."""
+    cap = 64
+    rs = _rs()
+    log, pol = rs.log, FreqPolicy(2, wait=False)
+    log.cfg.salvage_stash_cap = cap
+    log.append(b"warm" * 4)
+    rs.transports[0].inject(delay_s=0.08)
+    rs.transports[1].inject(delay_s=0.01)
+    _stream(log, pol, 8)
+    rs.kill_backup_midwire("node1", settle_s=0.04)
+    st = log.stats()
+    assert st["salvage_pending"] > 0
+    assert st["salvage_stash_bytes"] <= cap
+    assert st["salvage_spilled_images"] > 0
+    rs.recover_backup("node1")
+    pol.drain(log)
+    assert log.durable_lsn == 9             # nothing lost to the spill
+    rs.group.drain()
+    rs.shutdown()
+
+
 def test_failover_abandons_salvage_but_keeps_deferred_error():
     """The failover drain drops the old primary's salvage stash (its wire
     images must never cross the epoch fence) without consuming the
