@@ -10,6 +10,8 @@ Public surface:
   build_replica_set             — local / local+remote / remote_only setups
   quorum_recover / CopyAccessor — §4.2 recovery protocol
   ClusterManager                — membership / election / fencing contract
+  Scrubber / resync_backup /
+    FailureDetector / HealthMonitor — self-healing lifecycle (DESIGN.md §11)
   baselines                     — PMDK / FLEX / Query Fresh comparators
 """
 
@@ -32,6 +34,9 @@ from .replication import ReplicaSet, build_replica_set, device_size
 from .recovery import CopyAccessor, RecoveryError, RecoveryReport, \
     quorum_recover
 from .cluster import ClusterManager, Node
+from .health import (FailureDetector, HealthMonitor, HeartbeatConfig,
+                     ResyncReport, ScrubConfig, ScrubReport, Scrubber,
+                     resync_backup)
 
 __all__ = [
     "CACHE_LINE", "ATOM", "CostModel", "DeviceStats", "PMEMDevice",
@@ -50,4 +55,6 @@ __all__ = [
     "ReplicaSet", "build_replica_set", "device_size",
     "CopyAccessor", "RecoveryError", "RecoveryReport", "quorum_recover",
     "ClusterManager", "Node",
+    "FailureDetector", "HealthMonitor", "HeartbeatConfig", "ResyncReport",
+    "ScrubConfig", "ScrubReport", "Scrubber", "resync_backup",
 ]

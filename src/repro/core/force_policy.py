@@ -77,6 +77,13 @@ class ForcePolicy:
     def _bound(self, log: Log, depth: int) -> Optional[int]:
         return None
 
+    def _window(self, log: Log) -> Optional[int]:
+        """Records that can be completed but not yet ISSUED at any
+        instant — one policy window's span, the per-round term of the
+        tightened bound (every issue leader covers everything completed
+        up to its own LSN)."""
+        return None
+
     def vulnerability_bound(self, log: Log) -> Optional[int]:
         """Worst-case completed-but-unforced records, computed against
         the pipeline-depth CEILING (cfg.pipeline_depth) — the promise
@@ -84,11 +91,24 @@ class ForcePolicy:
         return self._bound(log, log.cfg.pipeline_depth)
 
     def effective_vulnerability_bound(self, log: Log) -> Optional[int]:
-        """Same formula against the adaptive controller's CURRENT depth
-        (DESIGN.md §9): the momentary exposure, which tightens whenever
-        the controller backs off after a failure.  Equals
-        vulnerability_bound for a static pipeline."""
-        return self._bound(log, log.pipeline_depth)
+        """Momentary exposure, tightened by per-round-span accounting.
+
+        The static (depth+1)-multiplied formula charges a FULL policy
+        window for every pipeline slot whether or not a round occupies
+        it.  Decompose instead: completed-but-undurable =
+        (completed − issued) + (issued − durable).  The first term is
+        one policy window (a leader's issue covers everything completed
+        up to its LSN, and with ``wait=False`` completing threads still
+        block on a pipeline slot before racing further ahead); the
+        second is ``log.inflight_span()`` — the rounds actually in
+        flight, measured, not assumed maximal.  Capped by the static
+        formula at the controller's CURRENT depth (DESIGN.md §9), so it
+        also tightens whenever the controller backs off."""
+        static = self._bound(log, log.pipeline_depth)
+        window = self._window(log)
+        if static is None or window is None:
+            return static
+        return min(static, window + log.inflight_span())
 
 
 class SyncPolicy(ForcePolicy):
@@ -111,6 +131,10 @@ class SyncPolicy(ForcePolicy):
         if self.wait and depth == 1:
             return 0
         return depth + log.cfg.max_threads
+
+    def _window(self, log: Log) -> Optional[int]:
+        # at most one completed-but-unissued record per completing thread
+        return log.cfg.max_threads
 
 
 class GroupCommitPolicy(ForcePolicy):
@@ -163,6 +187,10 @@ class GroupCommitPolicy(ForcePolicy):
             return base
         return base * (depth + 1)
 
+    def _window(self, log: Log) -> Optional[int]:
+        # one counter window plus records racing in while it fills
+        return self.group_size + log.cfg.max_threads
+
 
 class FreqPolicy(ForcePolicy):
     """The paper's frequency-based policy: leaders are chosen by LSN
@@ -193,6 +221,10 @@ class FreqPolicy(ForcePolicy):
         if self.wait and depth == 1:
             return base
         return base * (depth + 1)
+
+    def _window(self, log: Log) -> Optional[int]:
+        # F×T (§4.4): the classic frequency window, per round span
+        return self.freq * log.cfg.max_threads
 
 
 def make_policy(name: str, *, freq: int = 8, group_size: int = 128,

@@ -483,6 +483,15 @@ class IngestEngine:
             self._resolved.notify_all()
 
     # -- observability ---------------------------------------------------- #
+    @property
+    def busy(self) -> bool:
+        """True while producer work is queued, being collected, or
+        awaiting its durable ack — the load signal the background
+        scrubber (health.Scrubber) backs off on so maintenance reads
+        never compete with a hot ingest path."""
+        with self._lock:
+            return bool(self._queue or self._collecting or self._unacked)
+
     def latencies(self) -> List[float]:
         """Per-record submit→durable-ack seconds (most recent 64Ki)."""
         with self._lock:

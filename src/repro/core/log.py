@@ -1106,29 +1106,43 @@ class Log:
                     return
 
     def _raise_pipe_deferred_locked(self, issue: bool = False) -> None:
-        """Surface a deferred round failure.  At force-issue time
+        """Surface the deferred round failures.  At force-issue time
         (``issue=True``) errors whose rounds sit in the salvage stash are
         held back — the leader is about to retry exactly those rounds,
         and a successful salvage voids them; drain still surfaces
-        everything (durability has NOT been achieved yet)."""
+        everything (durability has NOT been achieved yet).
+
+        A storm of failed ``wait=False`` rounds queues one error per
+        round; they surface COALESCED — every surfaceable error leaves
+        the backlog at once, the oldest is raised, and the rest ride on
+        it as ``exc.pipe_backlog`` — so one drain (or one force) settles
+        the whole storm instead of surfacing one error per call."""
         if not self._pipe_errors:
             return
-        if not issue:
-            raise self._pipe_errors.pop(0)
-        # an error is only "pending retry" while its segment has salvage
-        # budget left; past the limit it surfaces on the next force
-        pending = {id(exc) for seg in self._salvage
-                   if seg.attempts < _SALVAGE_RETRY_LIMIT
-                   for exc in seg.deferred}
-        for e in self._inflight:
-            # a salvage round already re-issuing those ranges: its verdict
-            # (retire clears them / failure re-stashes them) is still out
-            if e.salvage_src:
-                pending.update(id(exc) for seg in e.salvage_src
-                               for exc in seg.deferred)
-        for i, exc in enumerate(self._pipe_errors):
-            if id(exc) not in pending:
-                raise self._pipe_errors.pop(i)
+        if issue:
+            # an error is only "pending retry" while its segment has
+            # salvage budget left; past the limit it surfaces now
+            pending = {id(exc) for seg in self._salvage
+                       if seg.attempts < _SALVAGE_RETRY_LIMIT
+                       for exc in seg.deferred}
+            for e in self._inflight:
+                # a salvage round already re-issuing those ranges: its
+                # verdict (retire clears them / failure re-stashes them)
+                # is still out
+                if e.salvage_src:
+                    pending.update(id(exc) for seg in e.salvage_src
+                                   for exc in seg.deferred)
+            surfaceable = [e for e in self._pipe_errors
+                           if id(e) not in pending]
+        else:
+            surfaceable = list(self._pipe_errors)
+        if not surfaceable:
+            return
+        for e in surfaceable:
+            self._pipe_errors.remove(e)
+        exc = surfaceable[0]
+        exc.pipe_backlog = tuple(surfaceable[1:])
+        raise exc
 
     def _pipe_await(self, lsn: int, entry: Optional[_PipeRound],
                     deadline: Optional[float]) -> int:
@@ -1173,7 +1187,14 @@ class Log:
         With ``surface_errors=False`` only the wait happens — deferred
         errors stay stashed for the next force/drain.  Failover uses
         this (ClusterManager._drain_logs) so settling the pipeline
-        before the epoch fence cannot destroy a failure signal."""
+        before the epoch fence cannot destroy a failure signal.
+
+        Every deferred error surfaces in ONE coalesced raise: the
+        oldest pipeline failure (with the rest of the pipeline backlog
+        AND any harvested replication-lane errors riding on
+        ``exc.pipe_backlog``), so after one failing drain the next is
+        clean — an error storm costs the app exactly one exception."""
+        pipe_exc: Optional[BaseException] = None
         with self._commit_cv:
             ok = self._commit_cv.wait_for(lambda: not self._inflight,
                                           timeout=timeout)
@@ -1181,9 +1202,22 @@ class Log:
                 raise LogError("drain timed out with durability rounds "
                                "still in flight")
             if surface_errors:
-                self._raise_pipe_deferred_locked()
+                try:
+                    self._raise_pipe_deferred_locked()
+                except BaseException as exc:
+                    pipe_exc = exc
         if self.repl is not None:
-            self.repl.drain(timeout=timeout, surface_errors=surface_errors)
+            try:
+                self.repl.drain(timeout=timeout,
+                                surface_errors=surface_errors)
+            except BaseException as exc:
+                if pipe_exc is None:
+                    raise
+                pipe_exc.pipe_backlog = (
+                    tuple(getattr(pipe_exc, "pipe_backlog", ()))
+                    + (exc,) + tuple(getattr(exc, "pipe_backlog", ())))
+        if pipe_exc is not None:
+            raise pipe_exc
 
     def abandon_salvage(self) -> None:
         """Drop the salvage stash (failed rounds awaiting re-issue).
@@ -1429,6 +1463,16 @@ class Log:
         """Completed-but-unforced records (Fig. 8c/d metric)."""
         with self._commit_cv:
             return max(0, self._complete_upto - self._durable_lsn)
+
+    def inflight_span(self) -> int:
+        """LSNs issued into the pipeline but not yet durable.  In-flight
+        rounds are contiguous (retirement is strictly head-first and a
+        failure rolls the issue watermark back to the last survivor), so
+        the issued-minus-durable difference IS the sum of the in-flight
+        rounds' spans — the live per-round-span term of the tightened
+        vulnerability bound (ForcePolicy.effective_vulnerability_bound)."""
+        with self._commit_cv:
+            return max(0, self._issue_lsn - self._durable_lsn)
 
     def vulnerability_bound(self, freq: int) -> int:
         """Theoretical worst case F × T (§4.4)."""
@@ -1780,6 +1824,7 @@ class Log:
                         complete_upto=self._complete_upto, used=self._used,
                         epoch=self._epoch, capacity=self.cfg.capacity,
                         inflight_rounds=len(self._inflight),
+                        deferred_errors=len(self._pipe_errors),
                         issue_lsn=self._issue_lsn,
                         pipeline_depth=self._depth,
                         salvage_pending=len(self._salvage),

@@ -36,6 +36,7 @@ class ReplicaSet:
     group: Optional[ReplicationGroup] = None
     log: Optional[Log] = None
     ingest: Optional[IngestEngine] = None
+    health: Optional[object] = None          # HealthMonitor (DESIGN.md §11)
 
     @property
     def n_durable(self) -> int:
@@ -71,15 +72,25 @@ class ReplicaSet:
                     and time.monotonic() < deadline:
                 time.sleep(0.002)
 
-    def recover_backup(self, server_id: str) -> None:
-        """Rejoin a recovered backup (§4.2): clear failure injection,
-        reopen its transport, and re-admit the current primary (the
-        server drops its fencing of it — epoch fencing across real
-        failovers stays with ClusterManager).  The backup's device holds
-        whatever it had when it failed; the salvage path (DESIGN.md §9)
-        or quorum repair closes the gap.  The group's lanes are settled
-        first so an in-flight op from before the failure cannot land its
-        late TransportError *after* the reopen and re-evict the backup."""
+    def recover_backup(self, server_id: str, resync: bool = True):
+        """Rejoin a recovered backup (§4.2).
+
+        With ``resync=True`` (the default) the gap the backup
+        accumulated while dead is closed ONLINE through
+        ``health.resync_backup`` (DESIGN.md §11): a catch-up phase
+        chunk-diffs the sealed durable prefix while the log stays live,
+        then a brief cut-over under the log's issue lock streams the
+        issued-but-unsealed delta, reopens the lane and re-admits this
+        path's primary (epoch fencing across real failovers stays with
+        ClusterManager).  Returns the ``ResyncReport`` with the traffic
+        accounting (``repair_bytes`` ≪ a full image re-send).
+
+        ``resync=False`` is the legacy rejoin: settle the lanes, reopen,
+        unfence — the backup's device keeps whatever it had, and the
+        salvage path (DESIGN.md §9) or quorum repair closes the gap."""
+        if resync and self.log is not None:
+            from .health import resync_backup
+            return resync_backup(self, server_id)
         if self.group is not None:
             self.group.drain(surface_errors=False)
         for t in self.transports:
@@ -88,6 +99,22 @@ class ReplicaSet:
                 # re-admit only THIS path's primary: a ClusterManager
                 # epoch fence of a deposed primary must stay up
                 t.server.unfence(t.primary_id)
+        return None
+
+    def attach_health(self, cluster=None, scrub=None, heartbeat=None,
+                      allow_degraded: bool = False,
+                      min_write_quorum: int = 1):
+        """Build (once) the self-healing lifecycle bundle (DESIGN.md
+        §11): background scrubber over every durable copy, heartbeat
+        failure detector over the backup lanes, automatic resync +
+        quorum restore on rejoin.  ``shutdown()`` stops it."""
+        if self.health is None:
+            from .health import HealthMonitor
+            self.health = HealthMonitor(
+                self, cluster=cluster, scrub=scrub, heartbeat=heartbeat,
+                allow_degraded=allow_degraded,
+                min_write_quorum=min_write_quorum)
+        return self.health
 
     def attach_ingest(self, cfg: Optional[IngestConfig] = None,
                       policy: Optional[ForcePolicy] = None) -> IngestEngine:
@@ -99,6 +126,9 @@ class ReplicaSet:
         return self.ingest
 
     def shutdown(self) -> None:
+        if self.health is not None:
+            self.health.stop()
+            self.health = None
         if self.ingest is not None:
             self.ingest.close()
             self.ingest = None

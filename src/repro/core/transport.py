@@ -265,6 +265,29 @@ class Transport:
         data, remote_vns = self.server.handle_read(off, n)
         return data, self.cost.rdma_rtt_ns + n * self.cost.rdma_byte_ns + remote_vns
 
+    def ping(self) -> float:
+        """Zero-payload heartbeat probe (DESIGN.md §11 failure detector).
+
+        Models a dedicated heartbeat QP sharing the physical path with
+        the data lane: an injected partition / failure schedule /
+        straggler stall fails or delays the probe exactly like a data
+        verb, but the data lane's ``closed`` flag does NOT — eviction is
+        a primary-side bookkeeping decision, and a recovered node must
+        be detectable on the heartbeat session even though its old lane
+        was torn down (the rejoin path reopens it).  Fencing does not
+        fail pings either: epoch control is not liveness.  Probes leave
+        the data lane's op counter alone so heartbeats never perturb a
+        ``fail_after_ops`` schedule.  Returns the round-trip vns."""
+        if self.failure.delay_s > 0:
+            time.sleep(self.failure.delay_s)
+        if self.failure.drop:
+            raise TransportError(f"heartbeat timeout "
+                                 f"(partition to {self.server.server_id})")
+        if 0 <= self.failure.fail_after_ops < self._ops:
+            raise TransportError(
+                f"backup {self.server.server_id} failed (injected)")
+        return self.cost.rdma_rtt_ns
+
 
 @dataclass
 class RoundSalvage:
@@ -524,10 +547,17 @@ class ReplicationGroup:
             self._pending_cv.notify_all()
 
     def _raise_deferred(self) -> None:
+        """Surface the harvested straggler errors COALESCED: the whole
+        backlog leaves at once, the oldest raises, and the rest ride on
+        it as ``exc.pipe_backlog`` (same contract as the log's deferred
+        pipeline errors) — one drain settles a storm of late lane
+        failures instead of surfacing one error per call."""
         with self._pending_cv:
             if not self._errors:
                 return
-            exc = self._errors.pop(0)
+            errors, self._errors = self._errors, []
+        exc = errors[0]
+        exc.pipe_backlog = tuple(errors[1:])
         raise exc
 
     def drain(self, timeout: Optional[float] = None,

@@ -321,3 +321,82 @@ def test_cluster_drain_preserves_deferred_round_errors():
     with pytest.raises(QuorumError):       # ...but the signal survived
         rs.log.drain(timeout=5.0)
     rs.shutdown()
+
+
+# --------------------------------------------------------------------- #
+# deferred-error backlog coalescing (DESIGN.md §11 satellite)
+# --------------------------------------------------------------------- #
+def test_deferred_error_storm_coalesces_into_one_drain():
+    """A storm of failed wait=False rounds queues one error per round;
+    they must surface in ONE drain — the oldest raises with the rest of
+    the backlog riding on exc.pipe_backlog — and the next drain is
+    clean.  (Previously each drain popped a single error, so apps
+    needed a bounded retry loop to converge.)"""
+    rs = _pipelined_rs(4, n_backups=2, write_quorum=3)
+    log = rs.log
+    log.append(b"w")                        # lsn 1 durable
+    rs.fail_backup("node1")                 # W=3 unreachable from now on
+
+    def settle(deadline=5.0):
+        end = time.monotonic() + deadline
+        while log.stats()["inflight_rounds"] and time.monotonic() < end:
+            time.sleep(0.002)
+
+    for _ in range(3):                      # three sequential failed rounds
+        rid, ptr = log.reserve(8)
+        ptr[:] = b"z" * 8
+        log.complete(rid)
+        log.force(rid, wait=False)
+        settle()
+    backlog = log.stats()["deferred_errors"]
+    assert backlog >= 2, "storm never accumulated a backlog (test inert)"
+    with pytest.raises(QuorumError) as ei:
+        log.drain(timeout=5.0)
+    # the whole backlog rode out on the single raise
+    assert len(ei.value.pipe_backlog) == backlog - 1
+    assert log.stats()["deferred_errors"] == 0
+    log.drain(timeout=5.0)                  # second drain MUST be clean
+    assert log.durable_lsn == 1             # failed rounds never retired
+    rs.shutdown()
+
+
+# --------------------------------------------------------------------- #
+# tightened vulnerability bound: per-round-span accounting (satellite)
+# --------------------------------------------------------------------- #
+def test_effective_bound_per_round_span_accounting_at_depth1():
+    """Pin both formulas at depth 1.  The static promise stays
+    (depth+1)×F×T for the non-blocking handoff; the effective bound is
+    one policy window plus the MEASURED in-flight span, capped by the
+    static formula — so an idle pipeline reports F×T, a single live
+    round reports F×T + its span, and wait=True keeps the classic
+    equalities."""
+    rs = _pipelined_rs(1, n_backups=1, write_quorum=2)
+    log = rs.log
+    log.cfg.max_threads = 1                 # T = 1
+
+    # wait=True, depth 1: the serial engine — both formulas are F×T
+    pol_w = FreqPolicy(4, wait=True)
+    assert pol_w.vulnerability_bound(log) == 4
+    assert pol_w.effective_vulnerability_bound(log) == 4
+
+    # wait=False: the static bound doubles, the effective bound does not
+    pol = FreqPolicy(4, wait=False)
+    assert pol.vulnerability_bound(log) == 4 * (1 + 1)
+    assert pol.effective_vulnerability_bound(log) == 4
+    assert log.inflight_span() == 0
+
+    # park one small round in flight: effective = window + live span,
+    # strictly tighter than the static (depth+1) multiplication
+    rs.transports[0].inject(delay_s=0.08)
+    rid, ptr = log.reserve(8)
+    ptr[:] = b"s" * 8
+    log.complete(rid)
+    log.force(rid, wait=False)
+    assert log.inflight_span() == 1
+    assert pol.effective_vulnerability_bound(log) == 4 + 1
+    assert pol.effective_vulnerability_bound(log) < \
+        pol.vulnerability_bound(log)
+    log.drain(timeout=5.0)
+    assert pol.effective_vulnerability_bound(log) == 4
+    rs.group.drain()
+    rs.shutdown()

@@ -7,7 +7,8 @@ from repro.core import (CopyAccessor, ClusterManager, Log, LogConfig, Node,
                         PMEMDevice, QuorumError, RecoveryError,
                         build_replica_set, device_size, quorum_recover)
 from repro.core.log import ring_offset
-from repro.core.transport import ReplicaServer, ReplicationGroup, Transport
+from repro.core.transport import (ReplicaServer, ReplicationGroup, Transport,
+                                  TransportError)
 
 pytestmark = pytest.mark.slow   # spins up replica servers per test
 
@@ -228,3 +229,75 @@ def test_primary_failover_fences_old_primary():
     assert [p for _, p in relog.iter_records()] == [b"before-failover"]
     relog.append(b"after-failover")   # unreplicated continuation on new node
     assert relog.durable_lsn == 2
+
+
+# --------------------------------------------------------------------- #
+# Transport.reopen edge cases (DESIGN.md §11 satellite)
+# --------------------------------------------------------------------- #
+def test_reopen_with_pending_salvage_stash_reissues_wire_images():
+    """Reopen a lane while the salvage stash still holds its post-time
+    wire images: the next force leader bundles the stash, the staged
+    image lands on the reopened lane, and the backup ends byte-identical
+    — no gap, no full-range re-send."""
+    import time
+    rs = build_replica_set(mode="local+remote", capacity=CAP, n_backups=2,
+                           write_quorum=3, pipeline_depth=2)
+    log = rs.log
+    for i in range(4):
+        log.append(f"base-{i}".encode() * 4)      # durable baseline
+    rid, ptr = log.reserve(64)
+    ptr[:] = b"m" * 64
+    log.complete(rid)
+    rs.transports[0].inject(delay_s=0.05)         # node1's ack is the late one
+    log.force(rid, wait=False)
+    rs.kill_backup_midwire("node1")               # round fails mid-wire
+    st = log.stats()
+    assert st["salvage_pending"] >= 1, "no stash to exercise (test inert)"
+    assert st["salvage_stash_bytes"] > 0          # wire image really held
+    # RAW reopen — not recover_backup: no resync, no lane drain.  The
+    # stash must survive the reopen and cover the lane's hole itself.
+    for t in rs.transports:
+        if t.server.server_id == "node1":
+            t.reopen()
+            t.server.unfence(t.primary_id)
+    rid2, ptr2 = log.reserve(32)
+    ptr2[:] = b"f" * 32
+    log.complete(rid2)
+    assert log.force(rid2, timeout=5.0) >= rid2   # stash + fresh, one round
+    assert log.stats()["salvage_rounds"] >= 1
+    assert log.stats()["salvage_pending"] == 0
+    log.drain(timeout=5.0)
+    rs.group.drain(timeout=5.0)
+    ring = rs.primary_dev.read(0, ring_offset() + CAP)
+    node1 = next(s for s in rs.servers if s.server_id == "node1")
+    assert node1.device.read(0, len(ring)) == ring
+    rs.shutdown()
+
+
+def test_reopen_racing_failover_fence_rejects_old_epoch_writes():
+    """Reopening a lane after a failover must NOT re-admit the deposed
+    primary: epoch fencing lives at the server, so the old primary's
+    writes bounce with TransportError and its forces fail their quorum
+    even through a freshly reopened transport."""
+    rs = build_replica_set(mode="local+remote", capacity=CAP, n_backups=2,
+                           write_quorum=2, pipeline_depth=2)
+    nodes = [Node("node0")] + [Node(s.server_id, server=s)
+                               for s in rs.servers]
+    cm = ClusterManager(nodes)
+    cm.attach_log(rs.log)
+    for i in range(4):
+        rs.log.append(f"pre-{i}".encode() * 4)
+    assert cm.report_failure("node0") == "node1"  # fence + election
+    t = rs.transports[0]
+    t.reopen()                                    # the race: lane reopened
+    assert not t.closed
+    assert t.server.is_fenced("node0")            # ...but the fence held
+    with pytest.raises(TransportError):
+        t.write_imm_bytes(b"x" * 64, ring_offset())
+    # the old primary's log cannot commit anything new either
+    rid, ptr = rs.log.reserve(8)
+    ptr[:] = b"o" * 8
+    rs.log.complete(rid)
+    with pytest.raises(QuorumError):
+        rs.log.force(rid, timeout=5.0)
+    rs.shutdown()

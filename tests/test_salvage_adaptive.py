@@ -496,15 +496,19 @@ def test_effective_vulnerability_bound_tracks_live_depth():
     log = rs.log
     log.cfg.max_threads = 1
     pol = FreqPolicy(4, wait=False)
-    # ceiling bound is static; effective bound starts at the serial depth
+    # ceiling bound is static; the tightened effective bound (per-round
+    # span accounting) is one F×T window while the pipeline is empty
     assert pol.vulnerability_bound(log) == 4 * (4 + 1)
-    assert pol.effective_vulnerability_bound(log) == 4 * (1 + 1)
+    assert pol.effective_vulnerability_bound(log) == 4
     for t in rs.transports:
         t.inject(delay_s=0.01)
     _stream(log, pol, 32, size=32)
     pol.drain(log)
     assert log.pipeline_depth == 4
-    assert pol.effective_vulnerability_bound(log) == \
+    # drained: no in-flight span, so the effective bound collapses back
+    # to one window — and never exceeds the static ceiling promise
+    assert pol.effective_vulnerability_bound(log) == 4
+    assert pol.effective_vulnerability_bound(log) < \
         pol.vulnerability_bound(log)
     rs.group.drain()
     rs.shutdown()
