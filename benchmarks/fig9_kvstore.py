@@ -28,6 +28,7 @@ from repro.core.baselines import FlexLog, PMDKLog
 from repro.core.force_policy import SyncPolicy
 from repro.core.ingest import IngestConfig, latency_percentiles
 from repro.core.replication import build_replica_set, device_size
+from repro.core.router import LogRouter, ShardSpec
 
 from .common import emit, threaded_ops_per_s
 
@@ -159,6 +160,137 @@ def ingest_run(shape: str) -> dict:
     return row
 
 
+# -- shard-scaling axis (DESIGN.md §12, the ISSUE-8 acceptance) -------- #
+SHARD_COUNTS = (1, 2, 4, 8)
+SHARD_CAP = 1 << 20           # per-shard ring (total records fit easily)
+SHARD_WINDOW = 32             # outstanding acks per producer: at 8 shards
+                              # only 2 producers feed each collector, so a
+                              # deeper window keeps per-shard waves from
+                              # degenerating to near-scalar sizes
+
+
+def shard_run(n_shards: int, probe: bool = False) -> dict:
+    """One shard-scaling row: ING_THREADS producers, ING_OPS records
+    each, hash-routed over ``n_shards`` replicated shards (each the
+    ingest-axis deployment: strict devices, 1 backup, W=2, sync acks,
+    group-commit front end, pipeline depth ING_DEPTH).
+
+    Throughput basis: this host is one core, so wall-clock cannot show
+    shard parallelism — ``modelled_records_per_s`` divides the record
+    count by the modelled MAKESPAN, max over shards of the shard's
+    accumulated hardware force time (``Log.force_vns_total``).  Shards
+    are independent devices and wires, so the makespan is what N-way
+    hardware would wait on; wall rec/s is reported informationally.
+
+    ``probe=True`` additionally (a) takes a mid-run two-phase snapshot
+    cut and checks the live cut view is digest-stable, and (b) after
+    shutdown runs shard-parallel vs serial recovery and demands
+    byte-identical per-shard record streams; the cut view recomputed
+    from the recovered images must equal the live one.
+    """
+    router = LogRouter()
+    for i in range(n_shards):
+        router.add_shard(ShardSpec(
+            shard_id=f"s{i}", mode="local+remote", capacity=SHARD_CAP,
+            n_backups=1, device_mode="strict",
+            pipeline_depth=ING_DEPTH, ingest=IngestConfig()))
+    keys = _ing_keys()
+    barrier = threading.Barrier(ING_THREADS + 1)
+
+    def producer(tid: int) -> None:
+        barrier.wait()
+        pend: deque = deque()
+        for k in keys[tid]:
+            pend.append(router.submit(encode_put(k, ING_VAL), key=k)[1])
+            if len(pend) >= SHARD_WINDOW:
+                pend.popleft().wait()
+        while pend:
+            pend.popleft().wait()
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(ING_THREADS)]
+    for th in threads:
+        th.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    cut = cut_digest_live = None
+    if probe:
+        time.sleep(0.05)                  # mid-run, appends in flight
+        cut = router.snapshot_cut()
+        router.wait_cut_durable(cut)
+        cut_digest_live = router.cut_digest(cut)
+    for th in threads:
+        th.join()
+    router.drain()
+    dt = time.perf_counter() - t0
+
+    total = ING_THREADS * ING_OPS
+    per_shard = {}
+    makespan_vns = 0.0
+    digest = 0
+    gapless = True
+    payloads = []
+    for sid in router.shard_ids:
+        sh = router.shard(sid)
+        vns = sh.log.force_vns_total
+        makespan_vns = max(makespan_vns, vns)
+        lsns = []
+        for lsn, p in sh.log.iter_records():
+            lsns.append(lsn)
+            payloads.append(bytes(p))
+        gapless &= lsns == list(range(1, len(lsns) + 1))
+        eng = sh.engine.stats()
+        per_shard[sid] = dict(records=len(lsns),
+                              force_vns=round(vns, 1),
+                              waves=eng["waves"],
+                              acked=eng["acked"], failed=eng["failed"])
+    for p in sorted(payloads):
+        digest = zlib.crc32(p, digest)
+    row = dict(shards=n_shards, producers=ING_THREADS, records=total,
+               records_per_s=round(total / dt, 1),
+               wall_ms=round(dt * 1e3, 2),
+               modelled_makespan_ms=round(makespan_vns * 1e-6, 3),
+               modelled_records_per_s=round(total / (makespan_vns * 1e-9),
+                                            1),
+               per_shard=per_shard, digest=digest, gapless=gapless)
+
+    if probe:
+        row["cut"] = dict(lsns=dict(cut.lsns),
+                          covered=sum(cut.lsns.values()),
+                          freeze_us=round(cut.freeze_s * 1e6, 1),
+                          digest=cut_digest_live,
+                          stable=router.cut_digest(cut)
+                          == cut_digest_live)
+    router.shutdown()
+    if probe:
+        par = router.recover(parallel=True)
+        ser = router.recover(parallel=False)
+        cut_digest_rec = 0
+        rec_payloads = []
+        for sid, upto in cut.lsns.items():
+            for lsn, p in par.logs[sid].iter_records():
+                if lsn <= upto:
+                    rec_payloads.append(bytes(p))
+        for p in sorted(rec_payloads):
+            cut_digest_rec = zlib.crc32(p, cut_digest_rec)
+        row["recovery"] = dict(
+            parallel_eq_serial=par.digests == ser.digests,
+            records=par.records,
+            per_shard_last_lsn={sid: sr.report.last_lsn
+                                for sid, sr in par.shards.items()},
+            cut_digest_recovered=cut_digest_rec,
+            cut_digest_matches_live=cut_digest_rec == cut_digest_live)
+    return row
+
+
+def run_shard_axis() -> dict:
+    """All shard counts: {str(n): row}; the 8-shard row carries the
+    snapshot-cut + recovery-equivalence probes.  ci_bench pins the
+    modelled-makespan scaling floor and the digest contracts here."""
+    return {str(n): shard_run(n, probe=(n == SHARD_COUNTS[-1]))
+            for n in SHARD_COUNTS}
+
+
 def run_ingest_axis(warm: bool = True) -> dict:
     """All three shapes, warmed: returns {shape: row}.  ci_bench pins
     the contracts (ratio, p99, digest identity) on this dict."""
@@ -205,6 +337,12 @@ def run(quick: bool = False):
         emit(f"fig9/ingest/{shape}", 1e6 / row["records_per_s"],
              f"ops_s={row['records_per_s']:.0f} p50ms={lat['p50']} "
              f"p99ms={lat['p99']} p999ms={lat['p999']} "
+             f"digest={row['digest']}")
+    for n, row in run_shard_axis().items():
+        emit(f"fig9/shards/{n}", 1e6 / row["modelled_records_per_s"],
+             f"modelled_ops_s={row['modelled_records_per_s']:.0f} "
+             f"wall_ops_s={row['records_per_s']:.0f} "
+             f"makespan_ms={row['modelled_makespan_ms']} "
              f"digest={row['digest']}")
 
 

@@ -12,6 +12,8 @@ Public surface:
   ClusterManager                — membership / election / fencing contract
   Scrubber / resync_backup /
     FailureDetector / HealthMonitor — self-healing lifecycle (DESIGN.md §11)
+  LogRouter / ShardSpec /
+    ShardPlacement / SnapshotCut  — sharded multi-log router (DESIGN.md §12)
   baselines                     — PMDK / FLEX / Query Fresh comparators
 """
 
@@ -37,6 +39,9 @@ from .cluster import ClusterManager, Node
 from .health import (FailureDetector, HealthMonitor, HeartbeatConfig,
                      ResyncReport, ScrubConfig, ScrubReport, Scrubber,
                      resync_backup)
+from .router import (LogRouter, RouterError, RouterRecovery, Shard,
+                     ShardPlacement, ShardRecovery, ShardSpec, SnapshotCut,
+                     UnknownShardError, payload_digest, stream_digest)
 
 __all__ = [
     "CACHE_LINE", "ATOM", "CostModel", "DeviceStats", "PMEMDevice",
@@ -57,4 +62,7 @@ __all__ = [
     "ClusterManager", "Node",
     "FailureDetector", "HealthMonitor", "HeartbeatConfig", "ResyncReport",
     "ScrubConfig", "ScrubReport", "Scrubber", "resync_backup",
+    "LogRouter", "RouterError", "RouterRecovery", "Shard", "ShardPlacement",
+    "ShardRecovery", "ShardSpec", "SnapshotCut", "UnknownShardError",
+    "payload_digest", "stream_digest",
 ]

@@ -39,10 +39,12 @@ class _ManagedGroup:
 class ClusterManager:
     """Membership + leader election + fencing for one Arcadia log."""
 
-    def __init__(self, nodes: List[Node], drain_timeout: float = 5.0):
+    def __init__(self, nodes: List[Node], drain_timeout: float = 5.0,
+                 name: str = ""):
         if not nodes:
             raise ValueError("cluster needs at least one node")
         self._lock = threading.Lock()
+        self.name = name              # e.g. the owning shard id (§12)
         self.nodes: Dict[str, Node] = {n.node_id: n for n in nodes}
         self._primary = self._elect_locked()
         self._callbacks: List[Callable[[str, str], None]] = []
@@ -206,6 +208,7 @@ class ClusterManager:
         whether policy lowered the bar or writes are wedging)."""
         with self._lock:
             return dict(
+                name=self.name,
                 primary=self._primary,
                 alive=sorted(n.node_id for n in self.nodes.values()
                              if n.alive),

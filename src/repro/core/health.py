@@ -668,8 +668,11 @@ class HealthMonitor:
             nodes = [Node(rs.primary_id, server=None)] + \
                 [Node(s.server_id, server=s) for s in rs.servers]
             cluster = ClusterManager(nodes)
-            if rs.log is not None:
-                cluster.attach_log(rs.log)
+        # the manager must settle THIS log's force pipeline before any
+        # failover re-wiring — also when the caller brought its own
+        # cluster (the shard router hands each shard a named manager)
+        if rs.log is not None and rs.log not in cluster._logs:
+            cluster.attach_log(rs.log)
         self.cluster = cluster
         if rs.group is not None:
             self.cluster.attach_group(rs.group,

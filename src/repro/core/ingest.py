@@ -17,6 +17,23 @@ Admission control (the bounded front door):
   fail  — a full queue raises IngestQueueFull immediately.
   shed  — a producer waits up to ``shed_deadline_s`` for space, then
           raises IngestShedError (deadline-based load shedding).
+          Waiting producers are admitted strictly FIFO: freed slots go
+          to the head of the wait queue, not to whichever thread wins
+          the wakeup race, so one hot producer re-arriving in a tight
+          loop cannot starve a slow one of queue slots (each producer
+          has at most one append in flight, so FIFO over the waiters IS
+          per-producer round-robin).
+
+Single-producer fast path: on a local-durability log under sync-ack
+semantics, an append that finds the engine completely idle (empty
+queue, no wave being collected, nothing awaiting ack) skips the
+collector handoff entirely — one scalar reserve/copy/complete plus a
+blocking force on the producer's own thread.  The collector/acker hop
+costs two thread switches per record, which caps a single producer at
+a fraction of the scalar append path's throughput for zero batching
+benefit (there is nothing to coalesce with); the fast path makes the
+engine free when it cannot help.  The moment a second producer
+overlaps, appends fall back to the queue and waves resume.
 
 Both a record-count bound and a payload-byte budget apply, and bytes
 are charged from submit until the wave is staged on the device
@@ -83,6 +100,9 @@ class IngestConfig:
     slice_bytes: int = 256 << 10      # large-wave slicing: one force per
                                       # <= this many payload bytes, so a
                                       # big wave spans pipeline slots
+    direct_path: bool = True          # single-producer fast path (local
+                                      # sync-ack logs only; see module
+                                      # docstring)
 
 
 def latency_percentiles(samples: Sequence[float],
@@ -156,7 +176,13 @@ class IngestEngine:
         # forces with the non-blocking leader handoff whatever the
         # caller's policy waits for (producers get their blocking
         # semantics from the durable ack, not from the force call)
-        self.policy = (policy or SyncPolicy()).nonblocking()
+        base_policy = policy or SyncPolicy()
+        self.policy = base_policy.nonblocking()
+        # the direct fast path forces each record immediately, which is
+        # only the caller's own durability cadence under sync semantics
+        # — a freq/group policy's deliberately-unforced tail must stay
+        # with the collector
+        self._sync_ack = isinstance(base_policy, SyncPolicy)
         self._lock = threading.Lock()
         self._space = threading.Condition(self._lock)      # producers
         self._work = threading.Condition(self._lock)       # collector
@@ -165,6 +191,11 @@ class IngestEngine:
         self._q_records = 0       # queued + in-collection records
         self._q_bytes = 0         # queued + in-collection payload bytes
         self._unacked: Deque[IngestTicket] = deque()   # LSN-assigned
+        self._shed_fifo: Deque[object] = deque()   # fair-admission turns
+        self._direct_lock = threading.Lock()       # fast path: 1 producer
+        self._direct_inflight = 0
+        self._producer_ident: Optional[int] = None  # first producer thread
+        self._multi_producer = False  # latched when a 2nd thread appends
         self._collecting = False
         self._flush_asap = False  # drain(): close the current wave now
         self._closed = False
@@ -175,6 +206,7 @@ class IngestEngine:
         self.failed = 0
         self.rejected = 0         # fail-fast refusals
         self.shed = 0             # shed-deadline refusals
+        self.direct = 0           # fast-path records (no collector hop)
         self.waves = 0            # batches the collector committed
         self.forced_slices = 0
         self.max_wave_records = 0
@@ -207,6 +239,20 @@ class IngestEngine:
         bounds a block-mode wait."""
         t = IngestTicket(bytes(data))
         cfg = self.cfg
+        # "single producer" is latched by thread identity: the fast path
+        # stays up only while every append so far came from one thread
+        # (reset by drain(), which proves the engine idle again).  A
+        # runtime-idle check alone is not enough — interleaved producers
+        # can each find the engine momentarily idle and defeat batching.
+        ident = threading.get_ident()
+        if self._producer_ident is None:
+            self._producer_ident = ident
+        elif ident != self._producer_ident:
+            self._multi_producer = True
+        if cfg.direct_path and not self._multi_producer \
+                and self._sync_ack and self.log.repl is None \
+                and self._direct_append(t):
+            return t
         with self._lock:
             if self._closed:
                 raise IngestClosedError("ingest engine is closed")
@@ -217,10 +263,27 @@ class IngestEngine:
                         f"submission queue full "
                         f"({cfg.queue_records} records / "
                         f"{cfg.queue_bytes} bytes)")
-                limit = cfg.shed_deadline_s if cfg.admission == "shed" \
-                    else timeout
-                ok = self._space.wait_for(lambda: self._fits_locked(t.size),
-                                          timeout=limit)
+                if cfg.admission == "shed":
+                    # fair admission: take a turn token and wait for BOTH
+                    # space and the head of the FIFO — a freed slot goes
+                    # to the longest-waiting producer, never to whichever
+                    # hot producer happens to win the wakeup race
+                    token = object()
+                    self._shed_fifo.append(token)
+                    try:
+                        ok = self._space.wait_for(
+                            lambda: self._closed
+                            or (self._shed_fifo[0] is token
+                                and self._fits_locked(t.size)),
+                            timeout=cfg.shed_deadline_s)
+                    finally:
+                        self._shed_fifo.remove(token)
+                        # head turn passes on (admitted or timed out):
+                        # wake the next waiter to claim it
+                        self._space.notify_all()
+                else:
+                    ok = self._space.wait_for(
+                        lambda: self._fits_locked(t.size), timeout=timeout)
                 if self._closed:
                     raise IngestClosedError(
                         "ingest engine closed during admission")
@@ -242,6 +305,52 @@ class IngestEngine:
                 self.peak_queue_bytes = self._q_bytes
             self._work.notify()
         return t
+
+    def _direct_append(self, t: IngestTicket) -> bool:
+        """Single-producer fast path (see module docstring): if this
+        producer is provably alone — nothing queued, no wave in
+        collection, nothing awaiting ack, and no other direct append in
+        flight — run the scalar reserve/copy/complete + blocking force
+        inline and resolve the ticket before returning.  Returns False
+        (caller takes the queue path) whenever any of that fails; the
+        ticket resolves with the log error rather than raising, matching
+        the wave path's ack semantics."""
+        if not self._direct_lock.acquire(blocking=False):
+            return False
+        try:
+            with self._lock:
+                if (self._closed or self._queue or self._collecting
+                        or self._unacked):
+                    return False
+                self._direct_inflight += 1
+                self.submitted += 1
+            lsn: Optional[int] = None
+            error: Optional[BaseException] = None
+            log = self.log
+            try:
+                rec_id, view = log.reserve(t.size)
+                if view is not None:
+                    view[:] = t._data
+                else:
+                    log.copy(rec_id, t._data)
+                log.complete(rec_id)
+                log.force(rec_id, freq=1, wait=True)
+                lsn = rec_id
+            except BaseException as exc:
+                error = exc
+            with self._lock:
+                self._direct_inflight -= 1
+                self.direct += 1
+                if error is None:
+                    t.lsn = lsn
+                    t._data = b""
+                    self._resolve_locked(t, t_ack=log.durable_ack_time(lsn))
+                else:
+                    self._resolve_locked(t, error=error)
+                self._resolved.notify_all()
+            return True
+        finally:
+            self._direct_lock.release()
 
     # -- collector -------------------------------------------------------- #
     def _flush_due_locked(self, first_t: float) -> bool:
@@ -449,8 +558,14 @@ class IngestEngine:
             self._fail_unacked(exc)
             raise
         with self._lock:
-            ok = self._resolved.wait_for(lambda: not self._unacked,
-                                         timeout=rem())
+            ok = self._resolved.wait_for(
+                lambda: not self._unacked and not self._direct_inflight,
+                timeout=rem())
+            if ok:
+                # the engine is provably idle: re-arm the single-producer
+                # latch so a post-drain phase can earn the fast path back
+                self._producer_ident = None
+                self._multi_producer = False
         if not ok:
             raise IngestError("drain timed out waiting for durable acks")
 
@@ -490,7 +605,8 @@ class IngestEngine:
         scrubber (health.Scrubber) backs off on so maintenance reads
         never compete with a hot ingest path."""
         with self._lock:
-            return bool(self._queue or self._collecting or self._unacked)
+            return bool(self._queue or self._collecting or self._unacked
+                        or self._direct_inflight)
 
     def latencies(self) -> List[float]:
         """Per-record submit→durable-ack seconds (most recent 64Ki)."""
@@ -505,7 +621,8 @@ class IngestEngine:
         with self._lock:
             return dict(submitted=self.submitted, acked=self.acked,
                         failed=self.failed, rejected=self.rejected,
-                        shed=self.shed, waves=self.waves,
+                        shed=self.shed, direct=self.direct,
+                        waves=self.waves,
                         forced_slices=self.forced_slices,
                         max_wave_records=self.max_wave_records,
                         peak_queue_records=self.peak_queue_records,

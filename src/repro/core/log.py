@@ -703,6 +703,16 @@ class Log:
         with self._commit_cv:
             return len(self._inflight) < self._depth
 
+    def capture_watermarks(self) -> Tuple[int, int]:
+        """(issue_lsn, durable_lsn) in one commit-lock pass.  The shard
+        router's two-phase snapshot cut (DESIGN.md §12) calls this while
+        holding ``_issue_lock``, so the issue watermark it records
+        cannot advance until the cut releases the lock — every record a
+        force had issued before the freeze is inside the cut, everything
+        later is outside it."""
+        with self._commit_cv:
+            return self._issue_lsn, self._durable_lsn
+
     def wait_durable_change(self, last_seen: int,
                             timeout: Optional[float] = None) -> int:
         """Block until the durable watermark differs from ``last_seen``
@@ -1777,7 +1787,8 @@ class Log:
         # timestamps exist for them in this process
         self._ack_base = self._durable_lsn
 
-    def iter_records(self) -> Iterator[Tuple[int, bytes]]:
+    def iter_records(self, upto: Optional[int] = None
+                     ) -> Iterator[Tuple[int, bytes]]:
         """Recovery iterator: yields (lsn, payload) for every live record
         from the head, skipping pads and tombstones (§4.3).
 
@@ -1785,13 +1796,20 @@ class Log:
         device read per iteration instead of two per record — and
         validates every payload checksum up front in the same batched
         pass the recovery scan uses (CorruptLogError before the first
-        yield, so a corrupt log never surfaces a partial replay)."""
+        yield, so a corrupt log never surfaces a partial replay).
+
+        ``upto`` bounds the replay to LSNs <= upto — a snapshot-cut
+        watermark (DESIGN.md §12): records beyond the cut are neither
+        validated nor yielded, so a cut view of a live log never trips
+        over a record that was still being staged when the cut froze."""
         with self._alloc_lock:
             items = sorted(self._recs.items())
             raw = self._ring_snapshot()
         live: List[Tuple[int, int, int, int, int, int]] = []
         unpack_from = _REC_HDR.unpack_from
         for lsn, rec in items:
+            if upto is not None and lsn > upto:
+                break
             if rec.pad:
                 continue
             if rec.state < COMPLETED:

@@ -153,6 +153,7 @@ def build_replica_set(
     adaptive_depth: bool = False,
     salvage: bool = True,
     ingest: Optional[IngestConfig] = None,
+    backup_ids: Optional[List[str]] = None,
 ) -> ReplicaSet:
     """Construct devices + transports + group + log for one deployment.
 
@@ -160,13 +161,21 @@ def build_replica_set(
     ``adaptive_depth=True`` it is the CEILING of the log's adaptive
     controller (DESIGN.md §9) instead of a static setting.  ``salvage``
     gates partial-quorum salvage of failed rounds.  ``ingest`` attaches
-    the group-commit ingestion front end with the given config."""
+    the group-commit ingestion front end with the given config.
+    ``backup_ids`` names the backup servers (default node1..nodeN) —
+    the shard router passes placement-derived names so every server id
+    across a multi-shard deployment is globally unique."""
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}")
     if mode == "local" and n_backups:
         raise ValueError("local mode has no backups")
     if mode != "local" and n_backups < 1:
         raise ValueError(f"{mode} mode needs >= 1 backup")
+    if backup_ids is None:
+        backup_ids = [f"node{i + 1}" for i in range(n_backups)]
+    elif len(backup_ids) != n_backups:
+        raise ValueError(f"backup_ids has {len(backup_ids)} names for "
+                         f"{n_backups} backups")
     local_durable = mode != "remote_only"
     n_durable = n_backups + (1 if local_durable else 0)
     if write_quorum is None:
@@ -183,9 +192,9 @@ def build_replica_set(
         cost=cost, name=f"{primary_id}/pmem")
     servers = [
         ReplicaServer(PMEMDevice(size, mode=device_mode, cost=cost,
-                                 name=f"node{i + 1}/pmem"),
-                      server_id=f"node{i + 1}")
-        for i in range(n_backups)
+                                 name=f"{bid}/pmem"),
+                      server_id=bid)
+        for bid in backup_ids
     ]
     transports = [Transport(s, primary_id=primary_id, cost=cost)
                   for s in servers]

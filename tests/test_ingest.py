@@ -367,3 +367,176 @@ def test_replica_set_attaches_and_shuts_down_ingest():
     assert rs.log.durable_lsn == 16
     rs.shutdown()                                   # closes engine first
     assert rs.ingest is None
+
+
+# --------------------------------------------------------------------- #
+# single-producer direct fast path (DESIGN.md §10)
+# --------------------------------------------------------------------- #
+def test_single_producer_takes_direct_path():
+    """One producer on a local sync-ack log never pays the collector
+    hop: every record goes scalar + blocking force on its own thread,
+    zero waves, and recovery still sees the exact gapless multiset."""
+    dev, log = _local_log(pipeline_depth=4)
+    eng = IngestEngine(log, IngestConfig())
+    tickets = [eng.append(f"d{i:04d}".encode().ljust(24, b"."))
+               for i in range(64)]
+    for t in tickets:
+        assert t.wait(5.0) > 0 and t.error is None
+        assert t.done                 # resolved before append returned
+    st = eng.stats()
+    assert st["direct"] == st["acked"] == 64
+    assert st["waves"] == 0
+    eng.close()
+    relog = Log.open(dev, LogConfig(capacity=CAP))
+    recovered = {lsn: bytes(p) for lsn, p in relog.iter_records()}
+    assert sorted(recovered) == list(range(1, 65))
+    for i, t in enumerate(tickets):
+        assert recovered[t.lsn] == f"d{i:04d}".encode().ljust(24, b".")
+
+
+def test_direct_path_latches_off_on_second_producer_and_rearms():
+    _, log = _local_log(pipeline_depth=4)
+    eng = IngestEngine(log, IngestConfig())
+    for i in range(8):                        # phase 1: alone -> direct
+        eng.append(b"solo" + bytes([i])).wait(5.0)
+    assert eng.stats()["direct"] == 8
+
+    other_done = threading.Event()
+
+    def other():
+        for i in range(8):
+            eng.append(b"othr" + bytes([i])).wait(5.0)
+        other_done.set()
+
+    th = threading.Thread(target=other)
+    th.start()
+    th.join()
+    assert other_done.is_set()
+    for i in range(8):                        # phase 2: latched off
+        eng.append(b"post" + bytes([i])).wait(5.0)
+    st = eng.stats()
+    assert st["acked"] == 24
+    # the second thread's appends and everything after went through
+    # the collector, not the fast path
+    assert st["direct"] == 8
+    assert st["waves"] > 0
+
+    eng.drain()                               # idle again: latch re-arms
+    eng.append(b"rearmed").wait(5.0)
+    assert eng.stats()["direct"] == 9
+    eng.close()
+
+
+def test_direct_path_never_engages_when_it_cannot_help():
+    # replicated log: the wave path owns quorum pipelining
+    rs = build_replica_set(mode="local+remote", capacity=CAP, n_backups=1,
+                           write_quorum=2, pipeline_depth=2,
+                           ingest=IngestConfig())
+    for _ in range(8):
+        rs.ingest.append(b"r" * 16).wait(5.0)
+    assert rs.ingest.stats()["direct"] == 0
+    rs.shutdown()
+    # freq policy: the deliberately-unforced tail stays with the collector
+    _, log = _local_log(pipeline_depth=2)
+    eng = IngestEngine(log, IngestConfig(), policy=FreqPolicy(4))
+    for _ in range(8):
+        eng.append(b"f" * 16)
+    eng.drain()
+    assert eng.stats()["direct"] == 0
+    eng.close()
+    # and the config switch turns it off outright
+    _, log2 = _local_log(pipeline_depth=2)
+    eng2 = IngestEngine(log2, IngestConfig(direct_path=False))
+    eng2.append(b"x" * 16).wait(5.0)
+    assert eng2.stats()["direct"] == 0
+    eng2.close()
+
+
+# --------------------------------------------------------------------- #
+# fair shed admission (FIFO turn queue)
+# --------------------------------------------------------------------- #
+def test_shed_admission_is_fifo_not_wakeup_race():
+    """Two producers wait for one freed slot: the slot goes to the
+    longest-waiting producer (FIFO head), deterministically — the
+    second sheds at its deadline."""
+    _, log = _local_log(pipeline_depth=2)
+    eng = IngestEngine(log, IngestConfig(
+        queue_records=1, admission="shed", shed_deadline_s=1.5,
+        flush_interval_s=60.0, flush_records=1 << 20,
+        direct_path=False))
+    # park the collector: nothing is ever flush-due, so the queue stays
+    # exactly as admission control leaves it
+    eng._flush_due_locked = lambda first_t: False
+    eng.append(b"seed" * 4)               # queue now full (1/1)
+
+    results = {}
+
+    def producer(name):
+        try:
+            results[name] = eng.append(name.encode() * 4)
+        except IngestShedError:
+            results[name] = "shed"
+
+    a = threading.Thread(target=producer, args=("aaaa",))
+    a.start()
+    time.sleep(0.15)                      # A is waiting at the head
+    b = threading.Thread(target=producer, args=("bbbb",))
+    b.start()
+    time.sleep(0.15)                      # B queued behind A
+
+    with eng._lock:                       # free exactly one slot
+        t0 = eng._queue.popleft()
+        eng._q_records -= 1
+        eng._q_bytes -= t0.size
+        eng._space.notify_all()
+    a.join(timeout=5.0)
+    b.join(timeout=5.0)
+
+    assert not isinstance(results["aaaa"], str)   # head got the slot...
+    assert results["bbbb"] == "shed"              # ...the tail shed
+    assert eng.shed == 1
+    del eng._flush_due_locked             # un-park for a clean close
+    eng.close()
+
+
+def test_shed_fairness_hot_producer_cannot_starve_slow_one():
+    """Regression for the wakeup-race starvation: a 10:1 hot producer
+    hammering a tiny queue must not shed out the slow producer — FIFO
+    turns hand freed slots to whoever waited longest."""
+    rs = build_replica_set(mode="local+remote", capacity=CAP, n_backups=1,
+                           write_quorum=2, pipeline_depth=2,
+                           ingest=IngestConfig(
+                               queue_records=2, admission="shed",
+                               shed_deadline_s=0.5))
+    rs.transports[0].inject(delay_s=0.002)        # slow the drain
+    eng = rs.ingest
+    slow_tickets, hot_shed = [], [0]
+
+    def hot():
+        for i in range(100):
+            try:
+                eng.append(f"hot{i:04d}".encode().ljust(24, b"."))
+            except IngestShedError:
+                hot_shed[0] += 1
+
+    def slow():
+        for i in range(10):
+            slow_tickets.append(
+                eng.append(f"slw{i:04d}".encode().ljust(24, b".")))
+            time.sleep(0.005)
+
+    th_h = threading.Thread(target=hot)
+    th_s = threading.Thread(target=slow)
+    th_h.start()
+    th_s.start()
+    th_h.join()
+    th_s.join()
+    eng.drain()
+    # the slow producer never shed and every one of its records acked
+    assert len(slow_tickets) == 10
+    for t in slow_tickets:
+        assert t.wait(5.0) > 0 and t.error is None
+    st = eng.stats()
+    assert st["acked"] == st["submitted"] == 110 - hot_shed[0]
+    assert st["failed"] == 0
+    rs.shutdown()

@@ -1,0 +1,349 @@
+"""Sharded multi-log router (DESIGN.md §12): routing, placement,
+shard-parallel recovery equivalence, cross-shard snapshot cuts,
+per-shard fault isolation, and the multi-tenant KV front end."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (HeartbeatConfig, IngestConfig, LogRouter,
+                        RouterError, ShardPlacement, ShardSpec,
+                        UnknownShardError, payload_digest)
+from repro.apps.kvstore import MultiTenantKV
+
+pytestmark = pytest.mark.slow   # replica servers + engine threads per test
+
+CAP = 1 << 18
+
+
+def _router(n_shards, mode="local+remote", n_backups=1, ingest=True,
+            **spec_kw):
+    r = LogRouter(ShardPlacement(nodes=("n0", "n1", "n2", "n3")))
+    for i in range(n_shards):
+        r.add_shard(ShardSpec(
+            shard_id=f"s{i}", mode=mode, n_backups=n_backups,
+            capacity=CAP, ingest=IngestConfig() if ingest else None,
+            **spec_kw))
+    return r
+
+
+# --------------------------------------------------------------------- #
+# routing + placement
+# --------------------------------------------------------------------- #
+def test_hash_and_explicit_routing():
+    r = _router(4, mode="local", n_backups=0, ingest=False)
+    # hash routing is deterministic and spreads across shards
+    seen = set()
+    for i in range(64):
+        key = f"k{i}".encode()
+        assert r.shard_for(key) is r.shard_for(key)
+        sid, lsn = r.append(b"v" * 16, key=key)
+        seen.add(sid)
+        assert r.shard(sid).log.stats()["next_lsn"] > lsn
+    assert len(seen) == 4
+    # explicit shard id wins over (and needs no) key
+    sid, _ = r.append(b"explicit", shard_id="s2")
+    assert sid == "s2"
+    with pytest.raises(UnknownShardError):
+        r.append(b"x", shard_id="nope")
+    with pytest.raises(RouterError):
+        r.append(b"x")                     # neither key nor shard_id
+    st = r.stats()
+    assert st["totals"]["appends"] == 65
+    assert st["totals"]["records"] == 65
+    r.shutdown()
+
+
+def test_placement_anti_affinity():
+    p = ShardPlacement(nodes=("a", "b", "c", "d"))
+    primaries = set()
+    for i in range(4):
+        primary, backups = p.assign(i, n_backups=2)
+        assert primary not in backups          # never co-located
+        assert len(set(backups)) == len(backups)
+        primaries.add(primary)
+    assert len(primaries) == 4                 # primaries rotate
+    with pytest.raises(ValueError):
+        p.assign(0, n_backups=4)               # needs 5 distinct nodes
+    # router-built server ids are placement-derived and globally unique
+    r = _router(4, n_backups=1, ingest=False)
+    ids = set()
+    for sid in r.shard_ids:
+        sh = r.shard(sid)
+        ids.add(sh.rs.primary_id)
+        ids.update(s.server_id for s in sh.rs.servers)
+    assert len(ids) == 8
+    r.shutdown()
+
+
+# --------------------------------------------------------------------- #
+# shard-parallel recovery == serial per-shard recovery
+# --------------------------------------------------------------------- #
+def test_parallel_recovery_matches_serial():
+    r = _router(4)
+    tickets = []
+    for i in range(200):
+        tickets.append(r.submit(f"rec-{i:04d}".encode().ljust(24, b"."),
+                                key=f"k{i}".encode())[1])
+    r.drain()
+    for t in tickets:
+        assert t.wait(5.0) > 0
+    r.shutdown()
+
+    par = r.recover(parallel=True)
+    ser = r.recover(parallel=False)
+    # byte-identical per-shard record streams (same LSNs, same payloads,
+    # same order), and the same quorum verdicts
+    assert par.digests == ser.digests
+    assert par.records == ser.records == 200
+    for sid in r.shard_ids:
+        assert par.shards[sid].report.last_lsn == \
+            ser.shards[sid].report.last_lsn
+        assert par.shards[sid].report.chosen == \
+            ser.shards[sid].report.chosen
+    # aggregate payload multiset == what was submitted
+    want = payload_digest(f"rec-{i:04d}".encode().ljust(24, b".")
+                          for i in range(200))
+    got = payload_digest(p for log in par.logs.values()
+                         for _, p in log.iter_records())
+    assert got == want
+
+
+# --------------------------------------------------------------------- #
+# cross-shard consistent snapshot cut
+# --------------------------------------------------------------------- #
+def test_snapshot_cut_covers_all_prior_acks_without_quiescing():
+    r = _router(4)
+    acked = [[] for _ in range(3)]      # (sid, lsn) per producer
+    stop = threading.Event()
+
+    def producer(pid):
+        i = 0
+        while not stop.is_set() and i < 400:
+            sid, t = r.submit(f"p{pid}-{i:05d}".encode(),
+                              key=f"p{pid}-{i}".encode())
+            t.wait(10.0)
+            acked[pid].append((sid, t.lsn))
+            i += 1
+
+    threads = [threading.Thread(target=producer, args=(p,))
+               for p in range(3)]
+    for th in threads:
+        th.start()
+    time.sleep(0.05)                    # mid-stream, appends in flight
+
+    pre = [list(a) for a in acked]      # acked strictly before the cut
+    cut = r.snapshot_cut()
+    assert sum(len(a) for a in pre) > 0
+    for plist in pre:
+        for sid, lsn in plist:
+            # anything acked before the cut froze is inside the cut
+            assert lsn <= cut.lsns[sid], (sid, lsn, cut.lsns)
+    # appends kept flowing while we held the cut
+    stop.set()
+    for th in threads:
+        th.join()
+    assert sum(len(a) for a in acked) > sum(len(a) for a in pre)
+
+    # the cut view is stable: same records, same digest, on every replay
+    r.wait_cut_durable(cut, timeout=10.0)
+    recs1 = list(r.cut_records(cut))
+    d1 = r.cut_digest(cut)
+    r.drain()
+    assert r.cut_digest(cut) == d1      # later durability can't grow it
+    assert len(recs1) == sum(cut.lsns.values())
+    # durable watermark at the cut never exceeds the issue watermark
+    for sid in cut.lsns:
+        assert cut.durable[sid] <= cut.lsns[sid]
+    r.shutdown()
+
+
+# --------------------------------------------------------------------- #
+# per-shard fault isolation
+# --------------------------------------------------------------------- #
+def test_one_shard_loses_backup_while_siblings_stay_hot():
+    # W=2 of 3 durable copies per shard: one backup death is absorbed
+    r = _router(3, n_backups=2, write_quorum=2)
+    victim_sid = "s1"
+    victim_srv = r.shard(victim_sid).rs.servers[0].server_id
+    tickets = []
+    for i in range(120):
+        tickets.append(r.submit(f"a{i:04d}".encode(),
+                                key=f"k{i}".encode())[1])
+        if i == 40:   # mid-stream: kill one backup of ONE shard
+            r.kill_backup_midwire(victim_sid, victim_srv, settle_s=0.0)
+    r.drain()
+    for t in tickets:
+        assert t.wait(5.0) > 0 and t.error is None
+    st = r.stats()["shards"]
+    for sid in r.shard_ids:
+        # every shard kept acking: the victim met W=2 on surviving
+        # lanes, the siblings never saw the fault at all
+        assert st[sid]["engine"]["failed"] == 0
+        assert st[sid]["engine"]["acked"] == st[sid]["engine"]["submitted"]
+    r.shutdown()
+
+    # acked records are never lost: recovery (minus the dead copy on the
+    # victim) returns every acked payload
+    devices = {victim_sid: {
+        n: d for n, d in r.shard(victim_sid).rs.server_devices().items()
+        if n != victim_srv}}
+    rec = r.recover(parallel=True, devices=devices)
+    assert rec.records == 120
+    got = payload_digest(p for log in rec.logs.values()
+                         for _, p in log.iter_records())
+    assert got == payload_digest(f"a{i:04d}".encode() for i in range(120))
+
+
+def test_shard_power_off_mid_wave_acked_survive_siblings_finish():
+    # strict local devices: unflushed lines die with the power
+    r = _router(3, mode="local", n_backups=0, device_mode="strict")
+    victim = r.shard("s0")
+    acked_v = {}                        # lsn -> payload acked on victim
+    stop = threading.Event()
+
+    def victim_producer():
+        i = 0
+        while not stop.is_set():
+            payload = f"v{i:05d}".encode().ljust(24, b".")
+            _, t = r.submit(payload, shard_id="s0")
+            if t.wait(5.0) and t.error is None:
+                acked_v[t.lsn] = payload
+            i += 1
+
+    vt = threading.Thread(target=victim_producer)
+    vt.start()
+    sib_tickets = []
+    for i in range(100):
+        sid = "s1" if i % 2 else "s2"
+        sib_tickets.append(r.submit(f"s{i:04d}".encode(),
+                                    shard_id=sid)[1])
+    time.sleep(0.03)
+    stop.set()                          # power cord: stop mid-stream...
+    vt.join()
+    acked_at_crash = dict(acked_v)
+    survivor = victim.rs.primary_dev.crash(      # ...and cut the power
+        np.random.default_rng(7), keep_probability=0.0)
+
+    # siblings never noticed; every one of their records acks
+    r.drain()
+    for t in sib_tickets:
+        assert t.wait(5.0) > 0 and t.error is None
+    st = r.stats()["shards"]
+    assert st["s1"]["engine"]["failed"] == 0
+    assert st["s2"]["engine"]["failed"] == 0
+    r.shutdown()
+
+    # recovery from the survivor image holds every acked record intact
+    rec = r.recover(devices={"s0": {victim.rs.primary_id: survivor}})
+    recovered = {lsn: bytes(p)
+                 for lsn, p in rec.logs["s0"].iter_records()}
+    assert acked_at_crash
+    for lsn, payload in acked_at_crash.items():
+        assert recovered.get(lsn) == payload
+    assert rec.shards["s1"].records == rec.shards["s2"].records == 50
+
+
+# --------------------------------------------------------------------- #
+# per-shard health attachment
+# --------------------------------------------------------------------- #
+def test_health_is_attached_and_ticked_per_shard():
+    # W=3 of 3: losing a backup leaves 2 reachable copies, so the shard
+    # visibly degrades (and keeps writing at the lowered quorum)
+    r = _router(3, n_backups=2, write_quorum=3)
+    hb = HeartbeatConfig(interval_s=0.01, miss_threshold=2,
+                         backoff_base_s=0.05, backoff_max_s=0.2,
+                         jitter=0.0)
+    monitors = r.attach_health(heartbeat=hb, allow_degraded=True,
+                               min_write_quorum=2)
+    assert set(monitors) == {"s0", "s1", "s2"}
+    # each shard has its OWN named cluster manager
+    names = {sid: m.cluster.name for sid, m in monitors.items()}
+    assert names == {"s0": "s0", "s1": "s1", "s2": "s2"}
+
+    victim = r.shard("s1").rs.servers[0].server_id
+    r.shard("s1").rs.transports[0].inject(drop=True)
+    now, evs = 0.0, []
+    for _ in range(8):
+        evs += r.tick_health(now)
+        now += 0.02
+    assert ("s1", "down", victim) in evs
+    assert not [e for e in evs if e[0] != "s1"]   # siblings: no events
+    st = r.stats()["shards"]
+    assert st["s1"]["health"]["cluster"]["degraded"]
+    assert not st["s0"]["health"]["cluster"]["degraded"]
+    # the degraded shard still writes (W lowered to 2 reachable copies)
+    sid, _ = r.append(b"still-hot", shard_id="s1")
+    assert sid == "s1"
+    r.shutdown()
+
+
+# --------------------------------------------------------------------- #
+# multi-tenant KV front end
+# --------------------------------------------------------------------- #
+def test_multi_tenant_isolation_and_snapshot_view():
+    kv = MultiTenantKV(ShardPlacement(nodes=("n0", "n1", "n2", "n3")))
+    # heterogeneous per-tenant deployments on one router
+    kv.add_tenant("acme", n_shards=2, mode="local+remote", n_backups=2,
+                  write_quorum=2, capacity=CAP, ingest=IngestConfig())
+    kv.add_tenant("beta", n_shards=1, mode="local", capacity=CAP)
+    for i in range(40):
+        kv.put("acme", f"k{i}".encode(), f"A{i}".encode())
+        kv.put("beta", f"k{i}".encode(), f"B{i}".encode())
+    for i in range(10):                  # overwrites: last writer wins
+        kv.put("acme", f"k{i}".encode(), f"A{i}x".encode())
+
+    # fault isolation: beta cannot touch acme's shards, and a fault on
+    # one acme lane leaves beta (and acme's acks, W=2 of 3) untouched
+    with pytest.raises(PermissionError):
+        kv.fail_backup("beta", "acme/s0", "whatever")
+    sh = kv.router.shard("acme/s0")
+    kv.kill_backup_midwire("acme", "acme/s0",
+                           sh.rs.servers[0].server_id, settle_s=0.0)
+    for i in range(40, 60):
+        kv.put("acme", f"k{i}".encode(), f"A{i}".encode())
+        kv.put("beta", f"k{i}".encode(), f"B{i}".encode())
+    kv.flush()
+
+    a = kv.tenant_stats("acme")
+    b = kv.tenant_stats("beta")
+    assert set(a["shards"]) == {"acme/s0", "acme/s1"}
+    assert a["engine_failed"] == 0 and b["engine_failed"] == 0
+    assert a["records"] == 70 and b["records"] == 60
+
+    cut, tables = kv.snapshot_view()
+    want_acme = {f"k{i}".encode():
+                 (f"A{i}x" if i < 10 else f"A{i}").encode()
+                 for i in range(60)}
+    want_beta = {f"k{i}".encode(): f"B{i}".encode() for i in range(60)}
+    assert tables[b"acme"] == want_acme
+    assert tables[b"beta"] == want_beta
+    kv.close()
+
+    # post-crash rebuild from raw shards alone (tenant ids travel in
+    # the payload) matches the live view
+    rec = kv.router.recover()
+    assert MultiTenantKV.recover_tables(rec.logs) == tables
+
+
+def test_per_shard_pipeline_depth_is_independent():
+    r = LogRouter()
+    r.add_shard(ShardSpec(shard_id="deep", mode="local+remote",
+                          n_backups=1, capacity=CAP, pipeline_depth=8))
+    r.add_shard(ShardSpec(shard_id="shallow", mode="local+remote",
+                          n_backups=1, capacity=CAP, pipeline_depth=1))
+    r.add_shard(ShardSpec(shard_id="adaptive", mode="local+remote",
+                          n_backups=1, capacity=CAP, pipeline_depth=8,
+                          adaptive_depth=True))
+    for i in range(30):
+        for sid in ("deep", "shallow", "adaptive"):
+            r.append(f"{sid}-{i}".encode(), shard_id=sid)
+    st = r.stats()["shards"]
+    assert st["deep"]["log"]["pipeline_depth"] == 8
+    assert st["shallow"]["log"]["pipeline_depth"] == 1
+    # the adaptive shard's controller runs per shard: its depth lives
+    # within its own ceiling regardless of the siblings' settings
+    assert 1 <= st["adaptive"]["log"]["pipeline_depth"] <= 8
+    r.shutdown()
