@@ -63,7 +63,7 @@ import threading
 import time
 import zlib
 
-from repro.core import (FreqPolicy, Log, LogConfig, PMEMDevice,
+from repro.core import (FreqPolicy, Log, LogConfig, LogFullError, PMEMDevice,
                         build_replica_set, make_policy)
 from repro.core.log import (FLAG_CLEANED, FLAG_PAD, FLAG_PHASH, FLAG_VALID,
                             FORCED, REC_HDR_SIZE, _REC_HDR, _Rec, _align8,
@@ -105,11 +105,22 @@ def expected_scalar_stats(mode: str) -> dict:
     REC_HDR_SIZE header bytes fewer per record, with flush/fence/line
     counts unchanged and crash-matrix equivalence proven by
     tests/test_crash_consistency.py (reserve-only records recover
-    identically).  Any other drift is still a failure.
+    identically).
+
+    PR 9 seeds the durable trim watermark slot in Log.create (one
+    8-byte store + flush + fence, once per log lifetime — zeroed media
+    must read as ABSENT, not as a valid watermark of 0): exactly +1
+    write / +8 bytes / +1 flush / +1 line / +1 fence, append-path
+    counts untouched.  Any other drift is still a failure.
     """
     exp = dict(SEED[mode]["stats"])
     exp["writes"] -= N
     exp["bytes_written"] -= N * REC_HDR_SIZE
+    exp["writes"] += 1                # PR 9: trim-slot seed in Log.create
+    exp["bytes_written"] += 8
+    exp["flushes"] += 1
+    exp["lines_flushed"] += 1
+    exp["fences"] += 1
     return exp
 
 
@@ -800,6 +811,88 @@ def fig7_scrub_run() -> dict:
     )
 
 
+# ---------------------------------------------------------------------- #
+# fig7 lifecycle rows (PR 9): recovery time vs log age, ± snapshots
+# ---------------------------------------------------------------------- #
+# "Log age" = total bytes ever appended, in multiples of a 1 MiB ring.
+# Without checkpoint+trim the ring must be provisioned for the whole
+# history and recovery scans all of it — O(ring).  With the lifecycle
+# (periodic trim behind a snapshot, DESIGN.md §13) the ring stays 1x and
+# recovery scans only the surviving tail above the durable trim
+# watermark — O(tail), flat in the log's age.
+LIFE_CAP = 1 << 20            # the trimmed service's ring (1 MiB)
+LIFE_REC = 1024
+LIFE_AGES = (4, 16)           # history = age x LIFE_CAP bytes
+LIFE_KEEP = 64                # records each trim keeps live (the "tail")
+LIFE_TRIM_FRAC = 0.5          # trim when the ring crosses half full
+LIFE_TRIALS = 3               # best-of (scan is sub-ms-noise sensitive)
+LIFE_RATIO_FLOOR = 5.0        # acceptance: O(tail) >= 5x at age 16
+
+
+def _life_payload(lsn: int) -> bytes:
+    return bytes([(lsn * 37 + 11) & 0xFF]) * LIFE_REC
+
+
+def fig7_lifecycle_run(age: int) -> dict:
+    # without snapshots: the ring holds the whole history
+    big_cfg = LogConfig(capacity=LIFE_CAP * age)
+    big_dev = PMEMDevice(device_size(LIFE_CAP * age), mode="fast")
+    big = Log.create(big_dev, big_cfg)
+    n = 0
+    try:
+        while True:
+            # key payloads by append ordinal, mapped to the ACTUAL lsn:
+            # ring-wrap pads consume LSNs, so _next_lsn-before-append lies
+            p = _life_payload(n + 1)
+            big.append(p)
+            n += 1
+    except LogFullError:
+        pass
+
+    # with snapshots: 1x ring, the same history, periodic trim once the
+    # ring crosses half full (standing in for checkpoint+gc: the bench
+    # pins the recovery bound, not the snapshot machinery)
+    cfg = LogConfig(capacity=LIFE_CAP)
+    dev = PMEMDevice(device_size(LIFE_CAP), mode="fast")
+    log = Log.create(dev, cfg)
+    trims = 0
+    expect = {}
+    for i in range(n):
+        p = _life_payload(i + 1)
+        expect[log.append(p)] = p
+        if log.stats()["used"] > LIFE_TRIM_FRAC * cfg.capacity:
+            log.trim(log.durable_lsn - LIFE_KEEP)
+            trims += 1
+
+    Log.open(big_dev, big_cfg)               # warm both scan paths
+    Log.open(dev, cfg)
+    full_s, tail_s = float("inf"), float("inf")
+    for _ in range(LIFE_TRIALS):
+        t0 = time.perf_counter()
+        Log.open(big_dev, big_cfg)
+        full_s = min(full_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        relog = Log.open(dev, cfg)
+        tail_s = min(tail_s, time.perf_counter() - t0)
+
+    got = dict(relog.iter_records())
+    head = relog._head_lsn
+    tail_exact = (sorted(got) == sorted(l for l in expect if l >= head)
+                  and all(got[l] == expect[l] for l in got))
+    no_resurrect = (relog.read_trim_watermark() == log.trim_lsn
+                    and head == log.trim_lsn + 1
+                    and (not got or min(got) == head))
+    return dict(
+        age=age, total_records=n,
+        history_bytes=LIFE_CAP * age, ring_bytes=LIFE_CAP,
+        tail_records=len(got), trims=trims,
+        full_scan_ms=round(full_s * 1e3, 3),
+        tail_scan_ms=round(tail_s * 1e3, 3),
+        speedup=round(full_s / tail_s, 2),
+        tail_exact=tail_exact, trimmed_resurrected=not no_resurrect,
+    )
+
+
 def run_fig7(out_path: str) -> list:
     problems = []
     rows = {}
@@ -808,6 +901,8 @@ def run_fig7(out_path: str) -> list:
         rows[f"fig7/local_recovery/{key}"] = fig7_run(phash)
     rows["fig7/resync/online"] = resync = fig7_resync_run()
     rows["fig7/scrub/overhead"] = scrub = fig7_scrub_run()
+    for age in LIFE_AGES:
+        rows[f"fig7/lifecycle/age{age}x"] = fig7_lifecycle_run(age)
 
     if not resync["image_identical"]:
         problems.append("fig7/resync: rejoined backup diverged from primary")
@@ -825,6 +920,21 @@ def run_fig7(out_path: str) -> list:
         problems.append("fig7/scrub: scrubber never got a pass in")
     if scrub["scrub_corrupt_found"] != 0:
         problems.append("fig7/scrub: phantom corruption on a clean log")
+
+    life = rows[f"fig7/lifecycle/age{LIFE_AGES[-1]}x"]
+    if life["speedup"] < LIFE_RATIO_FLOOR:
+        problems.append(
+            f"fig7/lifecycle: O(tail) recovery only {life['speedup']}x "
+            f"faster than O(ring) at age {LIFE_AGES[-1]}x "
+            f"(floor {LIFE_RATIO_FLOOR}x)")
+    for age in LIFE_AGES:
+        r = rows[f"fig7/lifecycle/age{age}x"]
+        if not r["tail_exact"]:
+            problems.append(
+                f"fig7/lifecycle age{age}x: recovered tail not byte-exact")
+        if r["trimmed_resurrected"]:
+            problems.append(
+                f"fig7/lifecycle age{age}x: trimmed records resurrected")
 
     head = rows["fig7/local_recovery/phash"]
     if head["speedup_scan"] < 5.0:
@@ -849,6 +959,8 @@ def run_fig7(out_path: str) -> list:
                             resync_repair_ceiling=RESYNC_REPAIR_CEIL,
                             scrub_throughput_ratio=scrub["throughput_ratio"],
                             scrub_throughput_floor=SCRUB_OVH_FLOOR,
+                            lifecycle_recovery_speedup=life["speedup"],
+                            lifecycle_recovery_floor=LIFE_RATIO_FLOOR,
                             passed=not problems),
         ),
         rows=rows,

@@ -290,6 +290,19 @@ class MultiTenantKV:
             tables.setdefault(t, {})[k] = v
         return cut, tables
 
+    def checkpoint_and_trim(self) -> Tuple[SnapshotCut,
+                                           Dict[bytes, Dict[bytes, bytes]],
+                                           Dict[str, float]]:
+        """Snapshot-then-truncate across every tenant (DESIGN.md §13):
+        materialise a coherent table state via the two-phase cut, then
+        bulk-truncate each shard up to its durable watermark in that
+        cut.  Returns (cut, tables, per-shard trim vns).  The tables
+        ARE the snapshot — the caller persists them; recovery overlays
+        the surviving log suffix via ``recover_tables(logs, tables)``."""
+        cut, tables = self.snapshot_view()
+        trims = self.router.trim_to_cut(cut)
+        return cut, tables, trims
+
     # -- tenant-scoped stats / faults ----------------------------------------- #
     def _check_owns(self, t: bytes, shard_id: str) -> None:
         if shard_id not in self._shards_of(t):
@@ -325,12 +338,20 @@ class MultiTenantKV:
         self.router.shutdown()
 
     @staticmethod
-    def recover_tables(logs: Dict[str, Log]
+    def recover_tables(logs: Dict[str, Log],
+                       base_tables: Optional[
+                           Dict[bytes, Dict[bytes, bytes]]] = None
                        ) -> Dict[bytes, Dict[bytes, bytes]]:
         """Rebuild per-tenant tables from recovered shard logs (e.g.
         ``LogRouter.recover().logs``) — the tenant id is in every
-        payload, so no external metadata is needed."""
-        tables: Dict[bytes, Dict[bytes, bytes]] = {}
+        payload, so no external metadata is needed.
+
+        After a ``checkpoint_and_trim``, the logs hold only the suffix
+        above each shard's trim watermark; pass the snapshot tables as
+        ``base_tables`` and the tail is replayed OVER them (puts are
+        last-writer-wins, so snapshot-then-overlay is exact)."""
+        tables: Dict[bytes, Dict[bytes, bytes]] = {
+            t: dict(kv) for t, kv in (base_tables or {}).items()}
         for log in logs.values():
             for _lsn, payload in log.iter_records():
                 t, k, v = decode_tenant_put(payload)

@@ -227,9 +227,18 @@ class CheckpointManager:
     # ------------------------------------------------------------------ #
     # space management (log reclamation + shard GC)
     # ------------------------------------------------------------------ #
-    def gc(self) -> int:
-        """Drop committed checkpoints beyond keep_last: delete their shards
-        and tombstone their manifest records (log head advances)."""
+    def gc(self, trim: bool = True) -> int:
+        """Drop committed checkpoints beyond keep_last: delete their
+        shards, then reclaim their log space.
+
+        With ``trim=True`` (default) the log is bulk-truncated up to
+        (not including) the oldest KEPT manifest via the durable trim
+        watermark (DESIGN.md §13) — checkpoint GC and log truncation
+        advance together, and journal records below the kept snapshot
+        (superseded by it: restore replays the journal only from the
+        restored step forward) are reclaimed in the same O(1) cut.
+        ``trim=False`` keeps the legacy per-record tombstone walk over
+        the victim manifests only."""
         ms = [(l, m) for l, m in self.manifests()
               if l <= self.log.durable_lsn]
         victims = ms[:-self.cfg.keep_last] if self.cfg.keep_last else ms
@@ -237,8 +246,19 @@ class CheckpointManager:
         for lsn, manifest in victims:
             for key in manifest["checksums"]:
                 self.store.delete(key)
-            self.log.cleanup(lsn)
             removed += 1
+        if trim:
+            # trimming below the oldest KEPT manifest is legal even with
+            # zero victims (records there are superseded by it) — the
+            # very first checkpoint already frees the ring behind it
+            kept = ms[len(victims):]
+            if kept:
+                self.log.trim(kept[0][0] - 1)
+            elif victims:
+                self.log.trim(victims[-1][0])
+        else:
+            for lsn, _ in victims:
+                self.log.cleanup(lsn)
         return removed
 
     def close(self) -> None:

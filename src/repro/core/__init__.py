@@ -14,6 +14,7 @@ Public surface:
     FailureDetector / HealthMonitor — self-healing lifecycle (DESIGN.md §11)
   LogRouter / ShardSpec /
     ShardPlacement / SnapshotCut  — sharded multi-log router (DESIGN.md §12)
+  LogLifecycle / TrimError      — checkpoint+truncate lifecycle (§13)
   baselines                     — PMDK / FLEX / Query Fresh comparators
 """
 
@@ -23,7 +24,8 @@ from .primitives import (AtomicRegion, ForceRound, IntegrityRegion, LF_REP,
                          persist, reissue_segs, write_and_force,
                          write_and_force_segs, write_and_force_segs_async)
 from .log import (AckRateEstimator, Batch, CorruptLogError, Log, LogConfig,
-                  LogError, LogFullError, Superline)
+                  LogError, LogFullError, Superline, TrimError)
+from .lifecycle import LifecycleConfig, LogLifecycle, TrimReport
 from .force_policy import (ForcePolicy, FreqPolicy, GroupCommitPolicy,
                            SyncPolicy, make_policy)
 from .ingest import (IngestClosedError, IngestConfig, IngestEngine,
@@ -49,7 +51,8 @@ __all__ = [
     "PARALLEL", "REP_LF", "SalvageForceRound", "persist", "reissue_segs",
     "write_and_force", "write_and_force_segs", "write_and_force_segs_async",
     "AckRateEstimator", "Batch", "CorruptLogError", "Log", "LogConfig",
-    "LogError", "LogFullError", "Superline",
+    "LogError", "LogFullError", "Superline", "TrimError",
+    "LifecycleConfig", "LogLifecycle", "TrimReport",
     "ForcePolicy", "FreqPolicy", "GroupCommitPolicy", "SyncPolicy",
     "make_policy",
     "IngestClosedError", "IngestConfig", "IngestEngine", "IngestError",

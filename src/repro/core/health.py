@@ -100,6 +100,8 @@ class ScrubReport:
     corrupt: int = 0                   # record×copy failures found
     repaired: int = 0                  # record×copy failures fixed
     unrepairable: int = 0              # no clean donor copy existed
+    skipped_trimmed: int = 0           # repairs dropped: record trimmed
+                                       # between snapshot and repair
     repair_bytes: int = 0              # chunk-diff traffic shipped
     repair_ranges: int = 0
     vns: float = 0.0                   # modelled scan + repair time
@@ -140,6 +142,7 @@ class Scrubber:
         self.corrupt_total = 0
         self.repaired_total = 0
         self.unrepairable_total = 0
+        self.skipped_trimmed_total = 0
         self.repair_bytes_total = 0
         self.vns_total = 0.0
 
@@ -280,35 +283,46 @@ class Scrubber:
             bad_by_ord.setdefault(i, []).append(name)
         for i, names in sorted(bad_by_ord.items()):
             lsn, off, size, extent = scanned[i]
-            donor = next((n for n in copies if n not in names), None)
-            if donor is None:
-                rep.unrepairable += len(names)
-                continue
-            golden = images[donor][i]
-            gold_np = np.frombuffer(golden, dtype=np.uint8)
-            for name in names:
-                cur = np.frombuffer(images[name][i], dtype=np.uint8)
-                dev = copies[name]
-                for a, b in _diff_ranges(gold_np, cur, off,
-                                         chunk=self.cfg.chunk):
-                    dev.write(a, golden[a - off:b - off])
-                    dev.persist(a, b - a)
-                    rep.repair_bytes += b - a
-                    rep.repair_ranges += 1
-                    rep.vns += cost.rdma_rtt_ns \
-                        + (b - a) * cost.rdma_byte_ns
-                # read back and re-validate before declaring it fixed
-                raw = dev.read(off, extent)
-                hl, hs, hc, hf = _REC_HDR.unpack_from(raw, 0)
-                ok = hl == lsn and hs == size \
-                    and bool(hf & (FLAG_VALID | FLAG_CLEANED))
-                if ok and not hf & FLAG_CLEANED:
-                    ok = _first_bad_payload(
-                        raw, [(0, 0, lsn, size, hc, hf)]) is None
-                if ok:
-                    rep.repaired += 1
-                else:
-                    rep.unrepairable += 1
+            # trim race (DESIGN.md §13): the snapshot may predate a bulk
+            # truncate, and the reclaimed ring bytes may already hold NEW
+            # records — a stale donor image must never overwrite them.
+            # Re-check the live head and do the writes under _alloc_lock,
+            # which trim holds across its whole head-advance, so the
+            # check cannot go stale mid-repair.
+            with log._alloc_lock:
+                if lsn < log._head_lsn:
+                    rep.skipped_trimmed += len(names)
+                    self.skipped_trimmed_total += len(names)
+                    continue
+                donor = next((n for n in copies if n not in names), None)
+                if donor is None:
+                    rep.unrepairable += len(names)
+                    continue
+                golden = images[donor][i]
+                gold_np = np.frombuffer(golden, dtype=np.uint8)
+                for name in names:
+                    cur = np.frombuffer(images[name][i], dtype=np.uint8)
+                    dev = copies[name]
+                    for a, b in _diff_ranges(gold_np, cur, off,
+                                             chunk=self.cfg.chunk):
+                        dev.write(a, golden[a - off:b - off])
+                        dev.persist(a, b - a)
+                        rep.repair_bytes += b - a
+                        rep.repair_ranges += 1
+                        rep.vns += cost.rdma_rtt_ns \
+                            + (b - a) * cost.rdma_byte_ns
+                    # read back and re-validate before declaring it fixed
+                    raw = dev.read(off, extent)
+                    hl, hs, hc, hf = _REC_HDR.unpack_from(raw, 0)
+                    ok = hl == lsn and hs == size \
+                        and bool(hf & (FLAG_VALID | FLAG_CLEANED))
+                    if ok and not hf & FLAG_CLEANED:
+                        ok = _first_bad_payload(
+                            raw, [(0, 0, lsn, size, hc, hf)]) is None
+                    if ok:
+                        rep.repaired += 1
+                    else:
+                        rep.unrepairable += 1
         self.scanned_bytes_total += rep.scanned_bytes
         self.corrupt_total += rep.corrupt
         self.repaired_total += rep.repaired
@@ -373,6 +387,7 @@ class Scrubber:
                     corrupt_found=self.corrupt_total,
                     repaired=self.repaired_total,
                     unrepairable=self.unrepairable_total,
+                    skipped_trimmed=self.skipped_trimmed_total,
                     repair_bytes=self.repair_bytes_total,
                     scrub_vns=self.vns_total)
 
@@ -467,6 +482,21 @@ def resync_backup(rs, server_id: str,
             backup.persist(off, n)
             rep.cutover_bytes += n
             rep.vns += cost.rdma_rtt_ns + n * cost.rdma_byte_ns
+        # a trim during catch-up advanced the watermark slot and
+        # superline while this lane was closed; Log.trim holds
+        # _issue_lock for its whole body, so re-diffing the meta
+        # region here cannot race another advance (DESIGN.md §13).
+        # chunk-diff keeps the common no-trim case at zero bytes.
+        meta_gold = log.dev.read(0, base)
+        meta_cur = backup.read(0, base)
+        if meta_gold != meta_cur:
+            g_np = np.frombuffer(meta_gold, dtype=np.uint8)
+            c_np = np.frombuffer(meta_cur, dtype=np.uint8)
+            for a, b in _diff_ranges(g_np, c_np, 0, chunk=chunk):
+                backup.write(a, meta_gold[a:b])
+                backup.persist(a, b - a)
+                rep.cutover_bytes += b - a
+                rep.vns += cost.rdma_rtt_ns + (b - a) * cost.rdma_byte_ns
         t.reopen()
         # re-admit only THIS path's primary: a ClusterManager epoch
         # fence of a deposed primary must stay up

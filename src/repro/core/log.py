@@ -18,9 +18,10 @@ path is split into four stages (Table 2) so that only the stages that
               durable watermark advances over a gapless prefix only (no
               holes in the committed prefix).
 
-Layout (Fig. 3):
+Layout (Fig. 3, + the PR-9 lifecycle slot):
 
   [ superline: AtomicRegion{epoch, head_lsn, start_lsn, head_off} ]
+  [ trim watermark: one 8-byte self-validating word               ]
   [ ring: circular buffer of records                              ]
 
   record := | lsn u64 | size u32 | crc u32 | flags u64 | payload.. pad8 |
@@ -129,10 +130,55 @@ def superline_region(dev: PMEMDevice,
                         volatile_index=True)
 
 
-def ring_offset() -> int:
+# -- durable trim watermark (DESIGN.md §13) ----------------------------- #
+#
+# One u64 word between the superline region and the ring:
+#
+#   word = (trim_lsn << 16) | crc16(trim_lsn)
+#
+# PMEM persists in 8-byte units, so the word is never torn — advancing
+# the watermark is ONE 8-byte-atomic store + flush (the MOD
+# minimal-ordering argument applied to truncation).  The embedded check
+# makes the word self-validating: bit rot (or pre-lifecycle zeroed
+# media, whose check is 0 but crc16(0) is not) decodes to None and
+# recovery falls back to the full scan instead of trusting it.
+TRIM_SLOT_SIZE = 8
+_TRIM_WORD = struct.Struct("<Q")
+_TRIM_LSN_MAX = (1 << 48) - 1
+
+
+def trim_slot_offset() -> int:
     r = AtomicRegion(PMEMDevice(4096), 0, SUPERLINE_SIZE,
                      volatile_index=True).total_size()
-    return _align8(r) + 8  # + guard
+    return _align8(r)
+
+
+def ring_offset() -> int:
+    # guard word, then cache-line align (the pre-slot layout started the
+    # ring at 128): record line phase is load-bearing for the pinned
+    # DeviceStats/LLC contracts — a misphased ring makes concurrent
+    # pipelined rounds share cache lines between one round's flush and
+    # the next round's DMA snoop, turning the modelled LLC counters
+    # scheduling-dependent
+    return (trim_slot_offset() + TRIM_SLOT_SIZE + 8 + 63) & ~63
+
+
+def _trim_check(lsn: int) -> int:
+    return crc32(_TRIM_WORD.pack(lsn)) & 0xFFFF
+
+
+def _trim_encode(lsn: int) -> bytes:
+    if not 0 <= lsn <= _TRIM_LSN_MAX:
+        raise ValueError(f"trim lsn {lsn} exceeds the 48-bit slot encoding")
+    return _TRIM_WORD.pack((lsn << 16) | _trim_check(lsn))
+
+
+def _trim_decode(raw: bytes) -> Optional[int]:
+    (word,) = _TRIM_WORD.unpack(raw)
+    lsn = word >> 16
+    if (word & 0xFFFF) != _trim_check(lsn):
+        return None
+    return lsn
 
 
 def _rec_crc(lsn: int, size: int, payload) -> int:
@@ -382,6 +428,12 @@ class CorruptLogError(LogError):
     pass
 
 
+class TrimError(LogError):
+    """Bulk truncation asked to drop records the crash story cannot
+    cover (beyond the durable watermark — nothing un-acked may be
+    declared checkpointed)."""
+
+
 @dataclass
 class LogConfig:
     capacity: int = 1 << 20          # ring bytes (excl. superline)
@@ -411,6 +463,15 @@ class LogConfig:
     # re-issue re-snapshots the ranges from the primary device instead).
     # None = unbounded.  Spills are counted in Log.stats().
     salvage_stash_cap: Optional[int] = None
+    # lifecycle backpressure (DESIGN.md §13): when the ring's free
+    # fraction drops to or below this after a reservation, the
+    # registered ``Log.on_free_space_low`` callback fires once per
+    # crossing (re-armed when trim raises free space back above it).
+    # The same callback is also tried once, last-ditch, when a reserve
+    # hits LogFullError — checkpoint+trim instead of failing the wave.
+    # None disables the threshold (the LogFullError retry still runs
+    # whenever a callback is registered).
+    free_space_low_frac: Optional[float] = None
 
 
 @dataclass
@@ -516,10 +577,27 @@ class Log:
         self._ack_ends: List[int] = []
         self._ack_wall: List[float] = []
         self._ack_base = 0            # LSNs <= this have no recorded time
+        self._ack_base_wall: Optional[float] = None  # boundary retire stamp
         self._epoch = 1
         self._head_lsn = 1
         self._head_off = 0
         self._start_lsn = 1
+        # lifecycle (DESIGN.md §13): durable trim watermark + free-space
+        # backpressure.  The callback fires OUTSIDE every log lock and
+        # only at complete()/complete_batch() — when the record that
+        # crossed the threshold is already committed, so a sync
+        # checkpoint save inside the callback cannot deadlock on the
+        # in-order-commit hole its own reservation would leave.
+        self.trim_off = trim_slot_offset()
+        self._trim_lsn = 0            # last bulk-trimmed LSN (volatile view)
+        self.on_free_space_low = None  # Callable[[Log], None] | None
+        self._space_low_fired = False
+        self._space_low_pending = False   # crossing seen, fire at complete
+        self._space_low_guard = threading.Lock()
+        self.space_low_triggers = 0   # threshold crossings fired
+        self.full_reclaims = 0        # LogFullError last-ditch reclaims
+        self.trimmed_records_total = 0
+        self.trimmed_bytes_total = 0
         self.force_vns_total = 0.0    # accumulated modelled hardware ns
 
     # ------------------------------------------------------------------ #
@@ -529,6 +607,12 @@ class Log:
     def create(cls, dev: PMEMDevice, cfg: LogConfig,
                repl: Optional[ReplicationGroup] = None) -> "Log":
         log = cls(dev, cfg, repl)
+        # seed the trim slot with a valid zero watermark so recovery can
+        # tell "no trim yet" from torn/alien media (zeroed bytes fail
+        # the embedded check and are ignored)
+        dev.write(log.trim_off, _trim_encode(0))
+        write_and_force(dev, log.trim_off, TRIM_SLOT_SIZE, repl,
+                        cfg.ordering, local_durable=cfg.local_durable)
         log._write_superline()
         return log
 
@@ -582,39 +666,116 @@ class Log:
         """
         if size < 0 or _align8(REC_HDR_SIZE + size) > self.cfg.capacity:
             raise ValueError("bad record size")
-        with self._alloc_lock:
-            off, pad_room = self._fit(size)
-            extent = _align8(REC_HDR_SIZE + size)
-            need = extent + (pad_room or 0)
-            if self._used + need > self.cfg.capacity:
-                raise LogFullError(
-                    f"log full: used={self._used} need={need} "
-                    f"cap={self.cfg.capacity}")
-            if pad_room is not None and pad_room >= REC_HDR_SIZE:
-                pad_lsn = self._next_lsn
-                self._next_lsn += 1
-                self._write_header(pad_room_off := self._tail_off, pad_lsn,
-                                   pad_room - REC_HDR_SIZE, 0,
-                                   FLAG_VALID | FLAG_PAD)
-                pr = _Rec(pad_lsn, self._abs(pad_room_off),
-                          pad_room - REC_HDR_SIZE, pad_room, state=COMPLETED,
-                          pad=True)
-                self._recs[pad_lsn] = pr
-                self._mark_complete(pad_lsn)
-            lsn = self._next_lsn
-            self._next_lsn += 1
-            rec = _Rec(lsn, self._abs(off), size, extent)
-            self._recs[lsn] = rec
-            self._tail_off = off + extent
-            self._used += need
-            # No header is published here: complete() writes the full
-            # header (lsn, size, crc, flags) in one device write.  The
-            # provisional flags=0 header the pre-PR4 path wrote was
-            # crash-equivalent to stale ring bytes — it was itself
-            # unflushed, so a crash could drop it and recovery already
-            # rejects whatever lies there (LSN mismatch, or the seeded
-            # payload checksum) — and complete() rewrote every field.
+        try:
+            with self._alloc_lock:
+                lsn, rec, fire = self._reserve_locked(size)
+        except LogFullError:
+            # graceful degradation (DESIGN.md §13): give the lifecycle
+            # callback one shot at checkpoint+trim, then retry once
+            if not self._reclaim_on_full():
+                raise
+            with self._alloc_lock:
+                lsn, rec, fire = self._reserve_locked(size)
+        if fire:
+            # defer to complete(): firing here would run the callback
+            # while THIS record is reserved-but-uncompleted, and a sync
+            # checkpoint save inside it would wait forever on in-order
+            # commit past the hole
+            self._space_low_pending = True
         return lsn, self.dev.view(rec.off + REC_HDR_SIZE, size)
+
+    def _reserve_locked(self, size: int) -> Tuple[int, "_Rec", bool]:
+        off, pad_room = self._fit(size)
+        extent = _align8(REC_HDR_SIZE + size)
+        need = extent + (pad_room or 0)
+        if self._used + need > self.cfg.capacity:
+            raise LogFullError(
+                f"log full: used={self._used} need={need} "
+                f"cap={self.cfg.capacity}")
+        if pad_room is not None and pad_room >= REC_HDR_SIZE:
+            pad_lsn = self._next_lsn
+            self._next_lsn += 1
+            self._write_header(pad_room_off := self._tail_off, pad_lsn,
+                               pad_room - REC_HDR_SIZE, 0,
+                               FLAG_VALID | FLAG_PAD)
+            pr = _Rec(pad_lsn, self._abs(pad_room_off),
+                      pad_room - REC_HDR_SIZE, pad_room, state=COMPLETED,
+                      pad=True)
+            self._recs[pad_lsn] = pr
+            self._mark_complete(pad_lsn)
+        lsn = self._next_lsn
+        self._next_lsn += 1
+        rec = _Rec(lsn, self._abs(off), size, extent)
+        self._recs[lsn] = rec
+        self._tail_off = off + extent
+        self._used += need
+        # No header is published here: complete() writes the full
+        # header (lsn, size, crc, flags) in one device write.  The
+        # provisional flags=0 header the pre-PR4 path wrote was
+        # crash-equivalent to stale ring bytes — it was itself
+        # unflushed, so a crash could drop it and recovery already
+        # rejects whatever lies there (LSN mismatch, or the seeded
+        # payload checksum) — and complete() rewrote every field.
+        return lsn, rec, self._space_low_check_locked()
+
+    # -- lifecycle backpressure (DESIGN.md §13) ------------------------- #
+    def _space_low_check_locked(self) -> bool:
+        """Latch the once-per-crossing threshold signal; caller fires
+        the callback after releasing the allocation lock."""
+        f = self.cfg.free_space_low_frac
+        if f is None or self.on_free_space_low is None \
+                or self._space_low_fired:
+            return False
+        if self.cfg.capacity - self._used <= f * self.cfg.capacity:
+            self._space_low_fired = True
+            return True
+        return False
+
+    def _rearm_space_low_locked(self) -> None:
+        f = self.cfg.free_space_low_frac
+        if f is not None and \
+                self.cfg.capacity - self._used > f * self.cfg.capacity:
+            self._space_low_fired = False
+
+    def _fire_space_low(self) -> bool:
+        """Run the reclaim callback outside every log lock.  The guard
+        is non-blocking and non-reentrant on purpose: the callback's own
+        appends (checkpoint manifest) re-enter reserve, and a nested
+        crossing must not stack a second reclaim on the first."""
+        cb = self.on_free_space_low
+        if cb is None or not self._space_low_guard.acquire(blocking=False):
+            return False
+        try:
+            self.space_low_triggers += 1
+            cb(self)
+            return True
+        finally:
+            self._space_low_guard.release()
+
+    def _reclaim_on_full(self) -> bool:
+        """Last-ditch reclaim when a reservation hits LogFullError:
+        True when a callback actually ran (caller retries once)."""
+        cb = self.on_free_space_low
+        if cb is None or not self._space_low_guard.acquire(blocking=False):
+            return False
+        try:
+            self.full_reclaims += 1
+            cb(self)
+            return True
+        finally:
+            self._space_low_guard.release()
+
+    @property
+    def free_bytes(self) -> int:
+        with self._alloc_lock:
+            return self.cfg.capacity - self._used
+
+    @property
+    def trim_lsn(self) -> int:
+        """Last LSN reclaimed by bulk truncation (the durable trim
+        watermark's volatile view)."""
+        with self._commit_cv:
+            return self._trim_lsn
 
     def _write_header(self, ring_off: int, lsn: int, size: int, crc: int,
                       flags: int) -> float:
@@ -649,6 +810,14 @@ class Log:
             rec.off, _REC_HDR.pack(rec.lsn, rec.size, crc, flags))
         vns += self.dev.cost.crc_byte_ns * rec.size
         self._mark_complete(rec_id)
+        if self._space_low_pending:
+            # the crossing record is committed now, so a sync
+            # checkpoint inside the callback can force its manifest
+            # without waiting on a reservation hole (benign race on
+            # the flag: the guard is non-reentrant and the latch
+            # stops refires)
+            self._space_low_pending = False
+            self._fire_space_low()
         return vns
 
     def _mark_complete(self, rec_id: int) -> None:
@@ -723,8 +892,13 @@ class Log:
                 lambda: self._durable_lsn != last_seen, timeout=timeout)
             return self._durable_lsn
 
-    # bound on the per-round ack-timestamp history; a lookup past the
-    # trimmed horizon returns None and callers fall back to "now"
+    # bound on the per-round ack-timestamp history.  When entries age
+    # out, the boundary's wall stamp is KEPT: retirements are
+    # wall-monotone, so any LSN at or below the trimmed horizon retired
+    # no later than the boundary did, and a lookup there returns that
+    # stamp (a tight upper bound) instead of None — callers used to fall
+    # back to "now", which silently inflated latency accounting once
+    # bulk trim made deep head movement routine (PR 9 satellite).
     _ACK_LOG_CAP = 1 << 15
 
     def _record_ack_locked(self, end_lsn: int, now: float) -> None:
@@ -733,20 +907,28 @@ class Log:
         if len(self._ack_ends) > self._ACK_LOG_CAP:
             drop = self._ACK_LOG_CAP // 2
             self._ack_base = self._ack_ends[drop - 1]
+            self._ack_base_wall = self._ack_wall[drop - 1]
             del self._ack_ends[:drop]
             del self._ack_wall[:drop]
 
     def durable_ack_time(self, lsn: int) -> Optional[float]:
         """The wall moment (time.monotonic domain) the round covering
         ``lsn`` retired — i.e. when a producer of that record could
-        first have been acked durable.  None if the LSN is not durable
-        yet, predates this process, or aged out of the history."""
+        first have been acked durable.  For an LSN that aged out of the
+        bounded history, the history boundary's stamp (an upper bound on
+        the true retire moment).  None if the LSN is not durable yet or
+        predates this process."""
         with self._commit_cv:
             return self._ack_time_locked(lsn)
 
     def _ack_time_locked(self, lsn: int) -> Optional[float]:
-        if lsn <= self._ack_base or lsn > self._durable_lsn:
+        if lsn > self._durable_lsn:
             return None
+        if lsn <= self._ack_base:
+            # aged out (or recovered): the boundary stamp bounds the
+            # true retire moment from above; None only when the record
+            # predates this process entirely
+            return self._ack_base_wall
         i = bisect_left(self._ack_ends, lsn)
         if i == len(self._ack_ends):
             return None
@@ -1297,66 +1479,80 @@ class Log:
         batch = Batch(lsns=[], sizes=list(sizes))
         if not sizes:
             return batch
-        with self._alloc_lock:
-            # plan (pure): mirror _fit over a shadow tail
-            tail, used = self._tail_off, self._used
-            plan: List[Tuple[str, int, int, int]] = []  # kind, off, size, extent
-            for size in sizes:
-                extent = _align8(REC_HDR_SIZE + size)
-                room = self.cfg.capacity - tail
-                off, pad_room = (tail, None) if extent <= room else (0, room)
-                need = extent + (pad_room or 0)
-                if used + need > self.cfg.capacity:
-                    raise LogFullError(
-                        f"log full: used={used} need={need} "
-                        f"cap={self.cfg.capacity}")
-                if pad_room is not None and pad_room >= REC_HDR_SIZE:
-                    plan.append(("pad", tail, pad_room - REC_HDR_SIZE,
-                                 pad_room))
-                elif pad_room is not None and pad_room > 0:
-                    plan.append(("skip", tail, 0, pad_room))
-                plan.append(("rec", off, size, extent))
-                tail = off + extent
-                used += need
-            # commit: lay records out over contiguous segments (a "skip"
-            # or a wrap breaks continuity), then build _Recs + buffers
-            seg_starts: List[int] = []
-            seg_lens: List[int] = []
-            placed: List[Tuple[str, int, int, int, int, int]] = []
-            prev_end = -1
-            for kind, off, size, extent in plan:
-                if kind == "skip":
-                    prev_end = -1       # stale bytes stay untouched
-                    continue
-                if off != prev_end:
-                    seg_starts.append(off)
-                    seg_lens.append(0)
-                si = len(seg_starts) - 1
-                placed.append((kind, off, size, extent, si, seg_lens[si]))
-                seg_lens[si] += extent
-                prev_end = off + extent
-            batch._segs = [_BatchSeg(s, bytearray(l))
-                           for s, l in zip(seg_starts, seg_lens)]
-            lsn = self._next_lsn
-            recs, abs_base = self._recs, self.ring_off
-            for kind, off, size, extent, si, hdr_off in placed:
-                if kind == "pad":
-                    buf = batch._segs[si].buf
-                    buf[hdr_off : hdr_off + REC_HDR_SIZE] = _REC_HDR.pack(
-                        lsn, size, 0, FLAG_VALID | FLAG_PAD)
-                    recs[lsn] = _Rec(lsn, abs_base + off, size, extent,
-                                     pad=True)
-                    batch._pad_lsns.append(lsn)
-                else:
-                    rec = _Rec(lsn, abs_base + off, size, extent)
-                    recs[lsn] = rec
-                    batch.lsns.append(lsn)
-                    batch._items.append((rec, si, hdr_off + REC_HDR_SIZE))
-                lsn += 1
-            self._next_lsn = lsn
-            self._tail_off = tail
-            self._used = used
+        try:
+            with self._alloc_lock:
+                fire = self._reserve_batch_locked(sizes, batch)
+        except LogFullError:
+            # the plan phase is pure, so the failed attempt left no
+            # partial state: run the lifecycle reclaim and retry once
+            if not self._reclaim_on_full():
+                raise
+            with self._alloc_lock:
+                fire = self._reserve_batch_locked(sizes, batch)
+        if fire:
+            self._space_low_pending = True    # fired at complete_batch
         return batch
+
+    def _reserve_batch_locked(self, sizes: List[int], batch: Batch) -> bool:
+        # plan (pure): mirror _fit over a shadow tail
+        tail, used = self._tail_off, self._used
+        plan: List[Tuple[str, int, int, int]] = []  # kind, off, size, extent
+        for size in sizes:
+            extent = _align8(REC_HDR_SIZE + size)
+            room = self.cfg.capacity - tail
+            off, pad_room = (tail, None) if extent <= room else (0, room)
+            need = extent + (pad_room or 0)
+            if used + need > self.cfg.capacity:
+                raise LogFullError(
+                    f"log full: used={used} need={need} "
+                    f"cap={self.cfg.capacity}")
+            if pad_room is not None and pad_room >= REC_HDR_SIZE:
+                plan.append(("pad", tail, pad_room - REC_HDR_SIZE,
+                             pad_room))
+            elif pad_room is not None and pad_room > 0:
+                plan.append(("skip", tail, 0, pad_room))
+            plan.append(("rec", off, size, extent))
+            tail = off + extent
+            used += need
+        # commit: lay records out over contiguous segments (a "skip"
+        # or a wrap breaks continuity), then build _Recs + buffers
+        seg_starts: List[int] = []
+        seg_lens: List[int] = []
+        placed: List[Tuple[str, int, int, int, int, int]] = []
+        prev_end = -1
+        for kind, off, size, extent in plan:
+            if kind == "skip":
+                prev_end = -1       # stale bytes stay untouched
+                continue
+            if off != prev_end:
+                seg_starts.append(off)
+                seg_lens.append(0)
+            si = len(seg_starts) - 1
+            placed.append((kind, off, size, extent, si, seg_lens[si]))
+            seg_lens[si] += extent
+            prev_end = off + extent
+        batch._segs = [_BatchSeg(s, bytearray(l))
+                       for s, l in zip(seg_starts, seg_lens)]
+        lsn = self._next_lsn
+        recs, abs_base = self._recs, self.ring_off
+        for kind, off, size, extent, si, hdr_off in placed:
+            if kind == "pad":
+                buf = batch._segs[si].buf
+                buf[hdr_off : hdr_off + REC_HDR_SIZE] = _REC_HDR.pack(
+                    lsn, size, 0, FLAG_VALID | FLAG_PAD)
+                recs[lsn] = _Rec(lsn, abs_base + off, size, extent,
+                                 pad=True)
+                batch._pad_lsns.append(lsn)
+            else:
+                rec = _Rec(lsn, abs_base + off, size, extent)
+                recs[lsn] = rec
+                batch.lsns.append(lsn)
+                batch._items.append((rec, si, hdr_off + REC_HDR_SIZE))
+            lsn += 1
+        self._next_lsn = lsn
+        self._tail_off = tail
+        self._used = used
+        return self._space_low_check_locked()
 
     def copy_batch(self, batch: Batch, payloads: List[bytes]) -> float:
         """Concurrent: stage all payload bytes (ntstore cost model)."""
@@ -1399,6 +1595,9 @@ class Log:
             vns += self.dev.write(self._abs(seg.ring_off), seg.buf)
         vns += self.dev.cost.crc_byte_ns * crc_bytes
         self._mark_complete_many(batch._pad_lsns + batch.lsns)
+        if self._space_low_pending:
+            self._space_low_pending = False
+            self._fire_space_low()
         return vns
 
     def force_batch(self, batch: Batch, freq: int = 1,
@@ -1491,6 +1690,90 @@ class Log:
     # ------------------------------------------------------------------ #
     # space reclamation
     # ------------------------------------------------------------------ #
+    def read_trim_watermark(self) -> Optional[int]:
+        """Decode the durable trim watermark slot; None when the word
+        fails its embedded check (zeroed/torn-by-rot/alien media)."""
+        return _trim_decode(self.dev.read(self.trim_off, TRIM_SLOT_SIZE))
+
+    def trim(self, upto_lsn: int,
+             _crash_hook=None) -> float:
+        """Bulk truncate: reclaim every record at or below ``upto_lsn``
+        (DESIGN.md §13).
+
+        The commit point is the watermark flush — ONE 8-byte-atomic
+        store + flush of the dedicated slot, replicated on the live
+        lanes.  A crash before it recovers the pre-trim view; any crash
+        after it recovers the post-trim view (recovery adopts the
+        watermark even when the superline publish never happened).  The
+        slot is a single PMEM persist unit, so no torn state exists.
+
+        Reclamation is O(1) in device work: no per-record tombstone
+        writes or replication rounds — the ring bytes stay in place and
+        simply fall outside the recovery scan once the head passes them
+        (the volatile record map drops its entries, an O(trimmed)
+        DRAM-only sweep).  Only durable records may be trimmed: the
+        caller (checkpoint GC) must have committed an application
+        snapshot covering them first.  ``upto_lsn`` below the head is a
+        no-op, beyond the durable watermark a TrimError.
+
+        ``_crash_hook`` is fault-injection plumbing: called with the
+        stage name at each ordering point; raising aborts mid-trim
+        exactly there (the harnesses then crash the device).
+        """
+        hook = _crash_hook or (lambda stage: None)
+        with self._alloc_lock, self._issue_lock:
+            # _issue_lock too: serializes the slot/superline publishes
+            # against a resync cut-over reading the meta region, and is
+            # the same order cleanup's guard path takes (_alloc_lock
+            # outer, _issue_lock inner, _commit_cv innermost).
+            with self._commit_cv:
+                if upto_lsn > self._durable_lsn:
+                    raise TrimError(
+                        f"trim({upto_lsn}) beyond durable watermark "
+                        f"{self._durable_lsn}: un-acked records cannot "
+                        f"be declared checkpointed")
+                if upto_lsn < self._head_lsn:
+                    return 0.0
+                nxt = self._recs.get(upto_lsn + 1)
+                new_head_off = (nxt.off - self.ring_off) if nxt is not None \
+                    else self._tail_off
+            # 1) commit point: advance the durable watermark.  Salvage
+            #    stash images and in-flight rounds only cover ranges
+            #    above the durable watermark, so they are disjoint from
+            #    everything this trim touches — no exclusion needed.
+            hook("pre_watermark")
+            vns = self.dev.write(self.trim_off, _trim_encode(upto_lsn))
+            hook("pre_watermark_flush")
+            vns += write_and_force(self.dev, self.trim_off, TRIM_SLOT_SIZE,
+                                   self.repl, self.cfg.ordering,
+                                   local_durable=self.cfg.local_durable)
+            hook("post_watermark")
+            # 2) O(1) device bookkeeping: drop the volatile entries and
+            #    advance the head over the whole span at once
+            with self._commit_cv:
+                n_trimmed = 0
+                for lsn in range(self._head_lsn, upto_lsn + 1):
+                    if self._recs.pop(lsn, None) is not None:
+                        n_trimmed += 1
+                cap = self.cfg.capacity
+                span = (new_head_off - self._head_off) % cap
+                # span 0 with a non-empty trim == the reclaimed range
+                # wrapped the whole ring (every live byte was trimmed)
+                freed = span if span > 0 else self._used
+                self._used -= freed
+                self._head_lsn = upto_lsn + 1
+                self._head_off = new_head_off
+                self._trim_lsn = upto_lsn
+                self.trimmed_records_total += n_trimmed
+                self.trimmed_bytes_total += freed
+                self._rearm_space_low_locked()
+            # 3) publish the advanced head (two-copy atomic superline,
+            #    replicated) — pure acceleration: recovery adopts the
+            #    post-trim view from the watermark alone
+            vns += self._write_superline()
+            hook("post_superline")
+        return vns
+
     def cleanup(self, rec_id: int) -> float:
         """Tombstone one record; advance the head over any contiguous
         reclaimed prefix and publish it in the superline."""
@@ -1549,6 +1832,7 @@ class Log:
             self._head_lsn += 1
             advanced = True
         if advanced:
+            self._rearm_space_low_locked()
             vns += self._write_superline()
         return vns
 
@@ -1567,6 +1851,7 @@ class Log:
             self._salvage_gen += 1
             self._issue_lsn = self._durable_lsn
             self._issue_off = 0
+            self._rearm_space_low_locked()
             return self._write_superline()
 
     # ------------------------------------------------------------------ #
@@ -1762,14 +2047,42 @@ class Log:
                 vec, _ = self._walk_chain(raw, tail, next_lsn, used)
             recs = recs + vec.recs
             tail, used, next_lsn = vec.tail, vec.used, vec.next_lsn
+        # durable trim watermark (DESIGN.md §13): a valid slot the
+        # header chain reaches marks everything at or below it as
+        # checkpointed-and-dead — recovery adopts the post-trim view
+        # (the crash-between-watermark-and-superline window) and,
+        # crucially, skips payload validation for the dead prefix: only
+        # the surviving tail pays the checksum pass (the O(tail) bound).
+        # A slot that fails its check, or claims an LSN the chain from
+        # the superline head cannot reach, is stale rot/corruption:
+        # ignore it and keep the full-scan view — never wedge.
+        trim = self.read_trim_watermark()
+        adopt = trim is not None and trim >= lo and next_lsn > trim
+        skip_upto = trim if adopt else lo - 1
         bad = _first_bad_payload(
             raw, ((k, r[0], lo + k, r[1], r[2], r[3])
                   for k, r in enumerate(recs)
-                  if r[3] & FLAG_VALID
+                  if lo + k > skip_upto
+                  and r[3] & FLAG_VALID
                   and not (r[3] & (FLAG_PAD | FLAG_CLEANED))))
         if bad is not None:
             tail, used, next_lsn = recs[bad][0], recs[bad][5], lo + bad
             recs = recs[:bad]
+        if adopt:
+            # drop <= len(recs): the chain check above guarantees the
+            # scan admitted every record up to the watermark, and a
+            # payload truncation can only land above it
+            drop = trim - lo + 1
+            kept = recs[drop:]
+            if kept:
+                self._head_off = kept[0][0]
+                used -= kept[0][5]      # entry_used is old-head-relative
+            else:
+                self._head_off = tail   # live window now empty
+                used = 0
+            recs = kept
+            lo = trim + 1
+            self._head_lsn = lo
         abs_base = self.ring_off
         rmap = self._recs
         for k, (pos, size, crc, flags, extent, _) in enumerate(recs):
@@ -1783,9 +2096,19 @@ class Log:
         self._durable_off = tail
         self._issue_lsn = self._durable_lsn
         self._issue_off = tail
+        self._trim_lsn = trim if (trim is not None
+                                  and trim < self._head_lsn) else 0
         # recovered records were acked in a previous life: no wall
         # timestamps exist for them in this process
         self._ack_base = self._durable_lsn
+        if adopt and self._head_lsn > s.head_lsn:
+            # finish the interrupted trim: republish the advanced head.
+            # Best effort — replication may be down at open time; the
+            # watermark alone keeps this recovery idempotent.
+            try:
+                self._write_superline()
+            except (QuorumError, TransportError):
+                pass
 
     def iter_records(self, upto: Optional[int] = None
                      ) -> Iterator[Tuple[int, bytes]]:
@@ -1840,6 +2163,12 @@ class Log:
             return dict(next_lsn=self._next_lsn, head_lsn=self._head_lsn,
                         durable_lsn=self._durable_lsn,
                         complete_upto=self._complete_upto, used=self._used,
+                        trim_lsn=self._trim_lsn,
+                        free_bytes=self.cfg.capacity - self._used,
+                        trimmed_records=self.trimmed_records_total,
+                        trimmed_bytes=self.trimmed_bytes_total,
+                        space_low_triggers=self.space_low_triggers,
+                        full_reclaims=self.full_reclaims,
                         epoch=self._epoch, capacity=self.cfg.capacity,
                         inflight_rounds=len(self._inflight),
                         deferred_errors=len(self._pipe_errors),

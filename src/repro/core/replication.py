@@ -101,6 +101,14 @@ class ReplicaSet:
                 t.server.unfence(t.primary_id)
         return None
 
+    def trim(self, upto_lsn: int) -> float:
+        """Bulk-truncate ``[head, upto_lsn]`` on every copy (DESIGN.md
+        §13): the durable trim watermark advances with one 8-byte-atomic
+        store, replicated through the normal lane/quorum machinery so a
+        rejoining backup resyncs only the surviving suffix.  Delegates
+        to ``Log.trim``; returns modelled vns."""
+        return self.log.trim(upto_lsn)
+
     def attach_health(self, cluster=None, scrub=None, heartbeat=None,
                       allow_degraded: bool = False,
                       min_write_quorum: int = 1):

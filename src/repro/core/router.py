@@ -404,6 +404,29 @@ class LogRouter:
     def cut_digest(self, cut: SnapshotCut) -> int:
         return payload_digest(p for _, _, p in self.cut_records(cut))
 
+    # -- lifecycle: per-shard trim (DESIGN.md §13) --------------------------- #
+    def trim_shard(self, shard_id: str, upto_lsn: int) -> float:
+        """Bulk-truncate one shard's log up to (and including)
+        ``upto_lsn`` via its durable trim watermark; sibling shards are
+        untouched.  Returns modelled vns."""
+        return self.shard(shard_id).rs.log.trim(upto_lsn)
+
+    def trim_to_cut(self, cut: SnapshotCut) -> Dict[str, float]:
+        """Truncate every shard up to its DURABLE watermark in ``cut``.
+
+        The caller must have materialized the cut's view first (e.g.
+        ``MultiTenantKV.snapshot_view`` or ``cut_records`` persisted to
+        a snapshot) — after this returns, records at or below
+        ``cut.durable[sid]`` exist only in that snapshot.  Using the
+        durable (not issue) watermark keeps the call trivially legal:
+        ``Log.trim`` refuses to pass the shard's durable LSN, and
+        durable ≤ issue ≤ the cut view's coverage."""
+        out: Dict[str, float] = {}
+        for sid, lsn in cut.durable.items():
+            log = self.shard(sid).rs.log
+            out[sid] = log.trim(min(lsn, log.durable_lsn))
+        return out
+
     # -- shard-parallel recovery -------------------------------------------- #
     def recover(self, parallel: bool = True,
                 devices: Optional[Dict[str, Dict[str, PMEMDevice]]] = None,

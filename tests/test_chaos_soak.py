@@ -333,3 +333,243 @@ def test_soak_heartbeat_failover_with_inflight_rounds():
     node1 = next(s for s in rs.servers if s.server_id == "node1")
     assert node1.device.read(0, len(ring)) == ring
     rs.shutdown()
+
+
+# --------------------------------------------------------------------- #
+# trim lifecycle interaction soaks (DESIGN.md §13)
+# --------------------------------------------------------------------- #
+#
+# Bulk truncation joins the chaos roster: the watermark advance holds
+# _alloc_lock + _issue_lock, so it serializes against scrub repair,
+# resync cut-over, and salvage re-issue — these soaks drive each pair
+# concurrently and check that no acked record above the head is lost,
+# no trimmed record resurrects, and the copies still converge where
+# bytes are defined (live record extents + the replicated trim slot).
+
+from repro.core.log import TRIM_SLOT_SIZE, _trim_decode, trim_slot_offset
+
+
+def _trim_slots_agree(rs):
+    want = rs.log.trim_lsn
+    assert _trim_decode(
+        rs.primary_dev.read(trim_slot_offset(), TRIM_SLOT_SIZE)) == want
+    for srv in rs.servers:
+        assert _trim_decode(
+            srv.device.read(trim_slot_offset(), TRIM_SLOT_SIZE)) == want
+
+
+def _live_extents_converged(rs):
+    log = rs.log
+    for lsn, rec in sorted(log._recs.items()):
+        if rec.pad or lsn < log._head_lsn or lsn > log.durable_lsn:
+            continue
+        gold = rs.primary_dev.read(rec.off, rec.extent)
+        for srv in rs.servers:
+            assert srv.device.read(rec.off, rec.extent) == gold, \
+                f"live lsn {lsn} diverged on {srv.server_id}"
+
+
+def _trim_keeper(rs, stop, keep=8, interval_s=0.003):
+    """Background truncator: keep the newest ``keep`` durable records."""
+    n = 0
+    while not stop.is_set():
+        d, h = rs.log.durable_lsn, rs.log.trim_lsn
+        if d - keep > h:
+            rs.trim(d - keep)
+            n += 1
+        time.sleep(interval_s)
+    return n
+
+
+def test_soak_trim_racing_scrub():
+    """Background scrubber vs background truncator vs hot ingest: the
+    repair loop re-checks the head under _alloc_lock, so a record
+    trimmed between detection and repair is skipped, never written
+    below the head — and the scrub still converges to a clean pass."""
+    rs = build_replica_set(mode="local+remote", capacity=C_CAP,
+                           n_backups=2, write_quorum=2,
+                           device_mode="strict", pipeline_depth=4)
+    eng = rs.attach_ingest(IngestConfig(flush_records=4),
+                           policy=FreqPolicy(4))
+    acked = {}
+    for i in range(12):
+        p = _payload(i + 1)
+        eng.append(p).wait(timeout=30)
+        acked[i + 1] = p
+    sc = Scrubber.from_replica_set(rs, cfg=ScrubConfig(interval_s=0.002))
+    sc.start()
+    stop = threading.Event()
+    trimmer = threading.Thread(target=_trim_keeper, args=(rs, stop))
+    trimmer.start()
+    np_rng = np.random.default_rng(7)
+    tickets = []
+
+    def producer(tid):
+        for i in range(20):
+            p = b"%d:%d" % (tid, i) * 8
+            t = eng.append(p, timeout=30)
+            tickets.append((t, p))
+            if i % 7 == 3:        # rot lands on the hot tail, racing both
+                lsn = rs.log.durable_lsn
+                rec = rs.log._recs.get(lsn)
+                if rec is not None and not rec.pad:
+                    rs.servers[tid % 2].device.corrupt(
+                        rec.off + 24, rec.size, np_rng, nbits=8)
+            time.sleep(0.001)
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(3)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30)
+    eng.drain(timeout=30)
+    stop.set()
+    trimmer.join(timeout=30)
+    rs.log.drain(timeout=10.0)
+    rs.group.drain(timeout=10.0)
+
+    # a deterministic final injection on a record that stays live, so
+    # the quiesced verify proves repair (not just absence of faults)
+    lsn = rs.log.durable_lsn
+    rec = rs.log._recs[lsn]
+    dev = rs.servers[0].device
+    before = dev.read(rec.off, rec.extent)
+    dev.corrupt(rec.off + 24, rec.size, np_rng, nbits=8)
+    assert dev.read(rec.off, rec.extent) != before
+    reports = sc.scrub_to_completion(max_passes=64)
+    sc.stop()
+    st = sc.stats()
+    assert reports[-1].complete and reports[-1].corrupt == 0
+    assert st["unrepairable"] == 0 and st["repaired"] >= 1
+    assert rs.log.trim_lsn > 0 and rs.log.stats()["trimmed_records"] > 0
+    got = dict(rs.log.iter_records())
+    head = rs.log._head_lsn
+    for lsn, p in acked.items():
+        if lsn >= head:
+            assert got[lsn] == p              # acked-never-lost
+        else:
+            assert lsn not in got             # trimmed-never-resurrected
+    for t, p in tickets:
+        lsn = t.wait(timeout=30)
+        assert lsn <= rs.log.durable_lsn
+        if lsn >= head:
+            assert got[lsn] == p
+    _trim_slots_agree(rs)
+    _live_extents_converged(rs)
+    rs.shutdown()
+
+
+def test_soak_trim_racing_backup_resync():
+    """Truncation while a backup is down AND while it resyncs: the
+    rejoining copy must adopt the advanced watermark (meta re-diff in
+    cut-over) and only the surviving suffix — records both appended and
+    trimmed during its absence never reach it as live state."""
+    rs = build_replica_set(mode="local+remote", capacity=C_CAP,
+                           n_backups=2, write_quorum=2,
+                           device_mode="strict", pipeline_depth=4)
+    eng = rs.attach_ingest(IngestConfig(flush_records=4),
+                           policy=FreqPolicy(4))
+    for i in range(8):
+        eng.append(_payload(i + 1)).wait(timeout=30)
+    rs.kill_backup_midwire("node1")
+    # while node1 is gone: traffic + a watermark advance it never saw
+    for i in range(8, 24):
+        eng.append(_payload(i + 1)).wait(timeout=30)
+    rs.trim(rs.log.durable_lsn - 8)
+    assert rs.log.trim_lsn > 0
+    stop = threading.Event()
+    trimmer = threading.Thread(target=_trim_keeper, args=(rs, stop))
+    trimmer.start()
+    tickets = []
+
+    def producer():
+        i = 0
+        while not stop.is_set():
+            tickets.append(eng.append(bytes([i & 0xFF]) * 48, timeout=30))
+            i += 1
+            time.sleep(0.001)
+
+    th = threading.Thread(target=producer)
+    th.start()
+    try:
+        time.sleep(0.02)
+        rep = rs.recover_backup("node1")     # resync races live trims
+        time.sleep(0.02)
+    finally:
+        stop.set()
+        th.join(timeout=30)
+        trimmer.join(timeout=30)
+    assert rep.server_id == "node1" and rep.repair_bytes > 0
+    eng.drain(timeout=30)
+    rs.log.drain(timeout=10.0)
+    rs.group.drain(timeout=10.0)
+    # one more settled trim: the rejoined lane must replicate it too
+    if rs.log.durable_lsn - 4 > rs.log.trim_lsn:
+        rs.trim(rs.log.durable_lsn - 4)
+    for t in tickets:
+        assert t.wait(timeout=30) <= rs.log.durable_lsn
+    _trim_slots_agree(rs)
+    _live_extents_converged(rs)
+    # the suffix a fresh replacement would recover from the backups
+    # alone is exactly the post-trim view
+    from repro.core import CopyAccessor, Log, LogConfig, quorum_recover
+    accs = [CopyAccessor.for_device(s.server_id, s.device)
+            for s in rs.servers]
+    img, _ = quorum_recover(accs, rs.cfg, write_quorum=2,
+                            local_name="node0-new")
+    relog = Log.open(img, LogConfig(capacity=C_CAP))
+    assert relog._head_lsn == rs.log._head_lsn
+    assert dict(relog.iter_records()) == dict(rs.log.iter_records())
+    rs.shutdown()
+
+
+def test_soak_trim_racing_salvage_stash():
+    """A mid-wire backup death leaves a failed round in the salvage
+    stash (un-durable LSNs).  Trimming the durable prefix while the
+    stash is pending must neither reclaim the stashed records (they are
+    above the durable LSN, so `trim` refuses by construction) nor lose
+    them: after the lane heals, the bundled salvage re-issue retires
+    them above the new head."""
+    rs = build_replica_set(mode="local+remote", capacity=C_CAP,
+                           n_backups=2, write_quorum=2,
+                           device_mode="strict", pipeline_depth=4)
+    acked = {}
+    for i in range(10):
+        lsn = rs.log.append(_payload(rs.log._next_lsn))
+        acked[lsn] = _payload(lsn)
+    pre_durable = rs.log.durable_lsn
+    rs.transports[0].inject(delay_s=0.03)    # node1 slow: round dwells
+    inflight = b"\x5a" * 64
+    rid, _ = rs.log.reserve(len(inflight))
+    rs.log.copy(rid, inflight)
+    rs.log.complete(rid)
+    rs.log.force(rid, wait=False)            # round in flight on the wire
+    rs.kill_backup_midwire("node1", settle_s=0.03)
+    acked[rid] = inflight
+    # the stashed round's LSN may not be durable yet; the prefix below
+    # it is — reclaim that while the stash is open
+    rs.trim(pre_durable - 2)
+    assert rs.log.trim_lsn == pre_durable - 2
+    # more traffic at the degraded quorum: the salvage bundle rides
+    # first on the next force and retires on the surviving lanes
+    for _ in range(6):
+        lsn = rs.log.append(_payload(rs.log._next_lsn))
+        acked[lsn] = _payload(lsn)
+    assert rid <= rs.log.durable_lsn         # stash salvaged, not lost
+    rs.transports[0].inject()
+    rep = rs.recover_backup("node1")
+    assert rep.server_id == "node1"
+    rs.trim(rs.log.durable_lsn - 4)          # and trim again, healed
+    rs.log.drain(timeout=10.0)
+    rs.group.drain(timeout=10.0)
+    got = dict(rs.log.iter_records())
+    head = rs.log._head_lsn
+    for lsn, p in acked.items():
+        if lsn >= head:
+            assert got[lsn] == p
+        else:
+            assert lsn not in got
+    _trim_slots_agree(rs)
+    _live_extents_converged(rs)
+    rs.shutdown()

@@ -472,3 +472,173 @@ def test_ingest_backpressure_no_deadlock_under_midwire_quorum_failure():
     assert rs.log.durable_lsn == rs.log.next_lsn - 1   # tail durable
     eng.close()
     rs.shutdown()
+
+
+# ------------------- crash-during-truncate schedules --------------------- #
+#
+# PR-9: the checkpoint→watermark-flush→reclaim sequence joins the matrix.
+# The durable trim watermark is ONE 8-byte-atomic store + flush; a crash
+# at any ordering point must land recovery on the pre-trim or post-trim
+# view, never a torn one:
+#
+#   T1  acked-never-lost: every record above the adopted head recovers
+#       as a gapless, payload-exact suffix;
+#   T2  never-torn: the adopted head is exactly old-head or trim+1;
+#   T3  trimmed-never-resurrected: a durable watermark is honored — no
+#       reclaimed record reappears below the new head;
+#   T4  never-wedge: rotted or forged watermark bytes downgrade to the
+#       full-ring scan, they never fail recovery.
+
+from repro.core import TrimError
+from repro.core.log import (TRIM_SLOT_SIZE, _trim_decode, _trim_encode,
+                            trim_slot_offset)
+
+T_CAP = 1 << 14
+T_RECORDS = 14
+T_UPTO = 8
+T_STAGES = ("pre_watermark", "pre_watermark_flush", "post_watermark",
+            "post_superline")
+
+
+class _TrimCrash(Exception):
+    pass
+
+
+def _t_log(mode="strict"):
+    dev = PMEMDevice(device_size(T_CAP), mode=mode)
+    log = Log.create(dev, LogConfig(capacity=T_CAP))
+    for i in range(1, T_RECORDS + 1):
+        log.append(_m_payload(i))
+    return dev, log
+
+
+def _t_assert_view(relog, upto=T_UPTO, n=T_RECORDS):
+    got = dict(relog.iter_records())
+    head = min(got) if got else n + 1
+    assert head in (1, upto + 1), f"torn trim state: head={head}"   # T2
+    assert sorted(got) == list(range(head, n + 1))                  # T1+T3
+    for lsn, payload in got.items():
+        assert payload == _m_payload(lsn)                           # T1
+    return head
+
+
+@pytest.mark.parametrize("stage", T_STAGES)
+@pytest.mark.parametrize("keep", [0.0, 0.5])
+def test_trim_crash_schedule_local(stage, keep):
+    """8 schedules: power loss at each watermark ordering point, with
+    the unflushed slot store surviving (keep) or not."""
+    dev, log = _t_log()
+
+    def hook(s):
+        if s == stage:
+            raise _TrimCrash(s)
+
+    with pytest.raises(_TrimCrash):
+        log.trim(T_UPTO, _crash_hook=hook)
+    survivor = dev.crash(np.random.default_rng(hash((stage, keep)) & 0xFF),
+                         keep_probability=keep)
+    relog = Log.open(survivor, LogConfig(capacity=T_CAP))
+    head = _t_assert_view(relog)
+    if stage in ("post_watermark", "post_superline"):
+        # the slot was flushed before the crash: the trim is durable
+        assert head == T_UPTO + 1
+    if stage == "pre_watermark" or (stage == "pre_watermark_flush"
+                                    and keep == 0.0):
+        assert head == 1                       # trim never became durable
+
+
+@pytest.mark.parametrize("stage", ["pre_watermark_flush", "post_watermark"])
+def test_trim_crash_schedule_replicated(stage):
+    """Primary dies mid-trim; recovery runs the §4.2 quorum protocol
+    over the backups.  post_watermark means the slot was already
+    replicated+flushed on the lanes, so the quorum view is post-trim;
+    an unflushed local store the backups never saw must recover
+    pre-trim."""
+    rs = build_replica_set(mode="local+remote", capacity=T_CAP,
+                           n_backups=2, write_quorum=3,
+                           device_mode="strict")
+    for i in range(1, T_RECORDS + 1):
+        rs.log.append(_m_payload(i))
+
+    def hook(s):
+        if s == stage:
+            raise _TrimCrash(s)
+
+    with pytest.raises(_TrimCrash):
+        rs.log.trim(T_UPTO, _crash_hook=hook)
+    # primary device destroyed: rebuild purely from the backup quorum
+    accs = [CopyAccessor.for_device(s.server_id, s.device)
+            for s in rs.servers]
+    img, _ = quorum_recover(accs, rs.cfg, write_quorum=2,
+                            local_name="node0-new")
+    relog = Log.open(img, LogConfig(capacity=T_CAP))
+    head = _t_assert_view(relog)
+    assert head == (T_UPTO + 1 if stage == "post_watermark" else 1)
+    rs.group.drain(surface_errors=False)
+    rs.shutdown()
+
+
+def test_trim_crash_schedule_rotted_watermark():
+    """Media rot on the slot after a durable trim: the word fails its
+    self-check, recovery falls back to the superline+full scan — which
+    already reflects the trim — and never wedges (T4)."""
+    dev, log = _t_log()
+    log.trim(T_UPTO)
+    dev.write(trim_slot_offset(), b"\x13\x37\xc0\xde\xba\xad\xf0\x0d")
+    dev.persist(trim_slot_offset(), TRIM_SLOT_SIZE)
+    survivor = dev.crash(np.random.default_rng(41), keep_probability=0.0)
+    relog = Log.open(survivor, LogConfig(capacity=T_CAP))
+    assert relog.read_trim_watermark() is None
+    # superline committed the head advance: post-trim view without the slot
+    assert sorted(dict(relog.iter_records())) == \
+        list(range(T_UPTO + 1, T_RECORDS + 1))
+
+
+def test_trim_crash_schedule_forged_watermark_beyond_chain():
+    """A valid-CRC watermark beyond the LSN chain (stale media from a
+    lost future generation) is cross-checked against the scan and
+    ignored (T4)."""
+    dev, log = _t_log()
+    dev.write(trim_slot_offset(), _trim_encode(T_RECORDS + 500))
+    dev.persist(trim_slot_offset(), TRIM_SLOT_SIZE)
+    survivor = dev.crash(np.random.default_rng(43), keep_probability=0.0)
+    relog = Log.open(survivor, LogConfig(capacity=T_CAP))
+    assert sorted(dict(relog.iter_records())) == \
+        list(range(1, T_RECORDS + 1))
+
+
+def test_trim_crash_schedule_double_crash_reopen():
+    """Crash during trim, recover, trim again, crash again: the slot is
+    reusable across generations and each recovery is pre/post, never
+    torn."""
+    dev, log = _t_log()
+
+    def hook(s):
+        if s == "pre_watermark_flush":
+            raise _TrimCrash(s)
+
+    with pytest.raises(_TrimCrash):
+        log.trim(T_UPTO, _crash_hook=hook)
+    surv1 = dev.crash(np.random.default_rng(5), keep_probability=0.5)
+    re1 = Log.open(surv1, LogConfig(capacity=T_CAP))
+    head1 = _t_assert_view(re1)
+    upto2 = T_RECORDS - 2
+    with pytest.raises(_TrimCrash):
+        re1.trim(upto2, _crash_hook=lambda s: (_ for _ in ()).throw(
+            _TrimCrash(s)) if s == "post_watermark" else None)
+    surv2 = surv1.crash(np.random.default_rng(6), keep_probability=0.0)
+    re2 = Log.open(surv2, LogConfig(capacity=T_CAP))
+    got = dict(re2.iter_records())
+    assert sorted(got) == list(range(upto2 + 1, T_RECORDS + 1))
+    for lsn, payload in got.items():
+        assert payload == _m_payload(lsn)
+
+
+def test_trim_beyond_durable_always_refused():
+    """The watermark can never pass the durable LSN — the other half of
+    the acked-never-lost argument (a trim cannot reclaim a record whose
+    ack is still in flight)."""
+    dev, log = _t_log()
+    with pytest.raises(TrimError):
+        log.trim(log.durable_lsn + 1)
+    assert log.read_trim_watermark() == 0     # slot untouched by refusal
