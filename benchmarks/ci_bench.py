@@ -63,8 +63,8 @@ import threading
 import time
 import zlib
 
-from repro.core import (FreqPolicy, Log, LogConfig, LogFullError, PMEMDevice,
-                        build_replica_set, make_policy)
+from repro.core import (CostModel, FreqPolicy, Log, LogConfig, LogFullError,
+                        PMEMDevice, build_replica_set, make_policy)
 from repro.core.log import (FLAG_CLEANED, FLAG_PAD, FLAG_PHASH, FLAG_VALID,
                             FORCED, REC_HDR_SIZE, _REC_HDR, _Rec, _align8,
                             _rec_checksum)
@@ -344,6 +344,9 @@ PIPE_RECORDS = 96
 PIPE_WARM = 8
 PIPE_FREQ = 4                 # force leader every 4th LSN
 PIPE_PAYLOAD = 1024
+PIPE_MODEL_FLOOR = 2.0        # depth4/depth1 MODELLED-latency speedup floor
+                              # (was exactly 1.0x under the serial-sum bug:
+                              # the virtual timeline must show the win)
 
 FIG6_STAT_KEYS = STAT_KEYS + ("llc_misses", "llc_hits")
 
@@ -361,10 +364,18 @@ def fig6_pipeline_run(depth: int, adaptive: bool = False) -> dict:
     wire, so wall-clock drops ~multiplicatively while the modelled
     hardware work (DeviceStats on every copy) is identical.  With
     ``adaptive`` the depth argument is the controller's CEILING and the
-    row records the depth trajectory it actually drove."""
+    row records the depth trajectory it actually drove.
+
+    The cost model prices the wire RTT at the INJECTED delay: the 4 ms
+    stall per round IS this scenario's wire, and pricing it at the
+    default 3 us would make the modelled timeline pipeline-insensitive
+    noise next to the flush port.  DeviceStats and digests never read
+    cost constants, so the depth-invariance pins are unaffected
+    (DESIGN.md §14)."""
+    cost = CostModel().with_wire_rtt(PIPE_DELAY_S * 1e9)
     rs = build_replica_set(mode="local+remote", capacity=CAP6, n_backups=2,
                            write_quorum=2, pipeline_depth=depth,
-                           adaptive_depth=adaptive)
+                           adaptive_depth=adaptive, cost=cost)
     payload = b"p" * PIPE_PAYLOAD
     pol = FreqPolicy(PIPE_FREQ, wait=False)
     for _ in range(PIPE_WARM):
@@ -372,6 +383,10 @@ def fig6_pipeline_run(depth: int, adaptive: bool = False) -> dict:
     rs.log.drain()
     for t in rs.transports:
         t.inject(delay_s=PIPE_DELAY_S)
+    # modelled time of the measured section = post-warm durable_vtime
+    # delta (the serial warm prefix would otherwise dilute the ratio)
+    v0 = rs.log.durable_vtime
+    w0 = rs.log.force_vns_total
     t0 = time.perf_counter()
     for _ in range(PIPE_RECORDS):
         rid, ptr = rs.log.reserve(len(payload))
@@ -381,8 +396,10 @@ def fig6_pipeline_run(depth: int, adaptive: bool = False) -> dict:
             rs.log.copy(rid, payload)
         rs.log.complete(rid)
         pol.on_complete(rs.log, rid)
-    pol.drain(rs.log)                       # force tail + pipeline empty
+    modelled_end = pol.drain(rs.log)        # force tail + pipeline empty
     wall_ms = (time.perf_counter() - t0) * 1e3
+    modelled_ms = (modelled_end - v0) * 1e-6
+    modelled_work_ms = (rs.log.force_vns_total - w0) * 1e-6
     rs.group.drain()                        # settle straggler lanes too
     stats = _replica_stats(rs)
     durable = rs.log.durable_lsn
@@ -400,6 +417,8 @@ def fig6_pipeline_run(depth: int, adaptive: bool = False) -> dict:
         pipeline_depth=depth, records=PIPE_RECORDS,
         wire_delay_ms=PIPE_DELAY_S * 1e3, force_freq=PIPE_FREQ,
         wall_ms=round(wall_ms, 2),
+        modelled_ms=round(modelled_ms, 3),
+        modelled_work_ms=round(modelled_work_ms, 3),
         ms_per_round=round(wall_ms / (PIPE_RECORDS // PIPE_FREQ), 3),
         durable_lsn=durable, recovered_records=n_rec,
         record_set_ok=bool(durable == total and n_rec == total),
@@ -548,8 +567,8 @@ def fig8_cell(name: str, kw: dict, n_threads: int) -> dict:
         th.join()
     dt = time.perf_counter() - t0
     window = log.vulnerability_window()
-    force_vns = log.force_vns_total       # modelled force cost of the run
-    pol.drain(log)
+    force_vns = log.force_vns_total       # modelled force WORK of the run
+    modelled_end = pol.drain(log)         # modelled TIME (virtual timeline)
     total = per * n_threads
     bound = pol.vulnerability_bound(log)
     suffix = kw.get("group_size") or kw.get("freq") or ""
@@ -557,6 +576,8 @@ def fig8_cell(name: str, kw: dict, n_threads: int) -> dict:
         policy=f"{name}{suffix}", threads=n_threads, records=total,
         records_per_s=round(total / dt, 1),
         force_vns_per_record=round(force_vns / total, 2),
+        modelled_ms=round(modelled_end * 1e-6, 3),
+        modelled_work_ms=round(log.force_vns_total * 1e-6, 3),
         window_after_run=window, vulnerability_bound=bound,
         all_durable=bool(log.durable_lsn == total
                          and log.vulnerability_window() == 0),
@@ -579,6 +600,14 @@ def run_fig8(out_path: str) -> list:
                     f"fig8/{r['policy']}/{n_threads}t: window "
                     f"{r['window_after_run']} exceeds F×T bound "
                     f"{r['vulnerability_bound']}")
+            # timeline sanity (PR 10): modelled time can never exceed
+            # the serial work sum — depth-1 blocking forces make them
+            # equal, overlap only ever shrinks the timeline
+            if r["modelled_ms"] > r["modelled_work_ms"] * (1 + 1e-9):
+                problems.append(
+                    f"fig8/{r['policy']}/{n_threads}t: modelled timeline "
+                    f"{r['modelled_ms']}ms exceeds the serial work sum "
+                    f"{r['modelled_work_ms']}ms")
     # §4.4 claim, pinned on the *modelled* force cost (deterministic —
     # wall-clock throughput on a contended CI runner is not): forcing
     # every 8th record must spend materially less modelled force work
@@ -644,6 +673,24 @@ def run_fig6(out_path: str) -> list:
             problems.append(
                 f"fig6/{tag}: wall {r['wall_ms']}ms "
                 f"not strictly below serial {base['wall_ms']}ms")
+        if r is not base and r["modelled_ms"] >= base["modelled_ms"]:
+            problems.append(
+                f"fig6/{tag}: modelled {r['modelled_ms']}ms not strictly "
+                f"below the depth-1 timeline {base['modelled_ms']}ms")
+        if r["modelled_ms"] > r["modelled_work_ms"] * (1 + 1e-9):
+            problems.append(
+                f"fig6/{tag}: modelled timeline {r['modelled_ms']}ms "
+                f"exceeds the serial work sum {r['modelled_work_ms']}ms")
+    # PR 10 pinned contract: the serial-sum bug charged overlapped rounds
+    # as a serial sum, so modelled depth4/depth1 was exactly 1.0x while
+    # wall clock showed ~4x; the virtual timeline must keep the modelled
+    # speedup at or above the floor
+    top = depth_rows[-1]
+    model_speedup = base["modelled_ms"] / top["modelled_ms"]
+    if model_speedup < PIPE_MODEL_FLOOR:
+        problems.append(
+            f"fig6: modelled depth{top['pipeline_depth']}/depth1 speedup "
+            f"{model_speedup:.2f}x below the {PIPE_MODEL_FLOOR}x floor")
     # adaptive acceptance: within 10% of the best static depth with no
     # tuning, driven by a recorded grow/shrink trajectory
     best_static = min(r["wall_ms"] for r in depth_rows)
@@ -677,6 +724,8 @@ def run_fig6(out_path: str) -> list:
             workload=dict(capacity=CAP6, record_bytes=PIPE_PAYLOAD,
                           records=PIPE_RECORDS, warm=PIPE_WARM,
                           force_freq=PIPE_FREQ, wire_delay_s=PIPE_DELAY_S,
+                          modelled_wire_rtt_ns=PIPE_DELAY_S * 1e9,
+                          modelled_basis="virtual_timeline_post_warm",
                           pipeline_depths=list(PIPE_DEPTHS),
                           adaptive_ceiling=ADAPTIVE_CEILING,
                           salvage=dict(records=SALV_RECORDS,
@@ -689,6 +738,10 @@ def run_fig6(out_path: str) -> list:
                 best_wall_ms=best_static,
                 adaptive_wall_ms=adaptive["wall_ms"],
                 speedup=round(base["wall_ms"] / best_static, 2),
+                modelled_serial_ms=base["modelled_ms"],
+                modelled_best_ms=top["modelled_ms"],
+                modelled_speedup=round(model_speedup, 2),
+                modelled_speedup_floor=PIPE_MODEL_FLOOR,
                 salvage_reissue_fraction=salvage["reissue_fraction"],
                 passed=not problems),
         ),
@@ -981,12 +1034,13 @@ ING_RATIO_FLOOR = 4.0         # grouped records/s >= 4x scalar (acceptance)
 ING_P99_CEILING_MS = 50.0     # grouped per-record p99 (generous: CI jitter)
 SHARD_SCALE_FLOOR = 3.0       # 8-shard modelled throughput >= 3x 1-shard
                               # at equal total producers.  Basis: modelled
-                              # MAKESPAN (max per-shard force_vns_total) —
-                              # this one-core host cannot show shard
-                              # parallelism in wall time, but shards are
-                              # independent devices/wires, so the makespan
-                              # is what N-way hardware waits on; wall rec/s
-                              # stays informational.
+                              # MAKESPAN (max per-shard virtual-timeline
+                              # completion, DESIGN.md §14) — this one-core
+                              # host cannot show shard parallelism in wall
+                              # time, but shards are independent
+                              # devices/wires, so the makespan is what
+                              # N-way hardware waits on; wall rec/s stays
+                              # informational.
 
 
 def run_fig9(out_path: str) -> list:
@@ -1075,7 +1129,7 @@ def run_fig9(out_path: str) -> list:
                                device_mode="strict",
                                pipeline_depth=ING_DEPTH,
                                durability="sync"),
-                throughput_basis="modelled_makespan_force_vns"),
+                throughput_basis="modelled_makespan_virtual_timeline"),
             acceptance=dict(
                 ratio_floor=ING_RATIO_FLOOR,
                 grouped_vs_scalar_ratio=round(ratio, 2),

@@ -28,7 +28,7 @@ import time
 
 import numpy as np
 
-from repro.core import (FreqPolicy, ORDERINGS, PMEMDevice, REP_LF,
+from repro.core import (CostModel, FreqPolicy, ORDERINGS, PMEMDevice, REP_LF,
                         write_and_force)
 from repro.core.replication import build_replica_set, device_size
 
@@ -118,16 +118,21 @@ def pipelined_force(quick: bool = False):
     n = 48 if quick else 96
     delay_s = 0.002 if quick else 0.004
     payload = b"p" * 1024
+    # Price the wire RTT in the cost model at the same value we inject on
+    # the wall clock, so the modelled (virtual-timeline, DESIGN.md §14) and
+    # measured speedups are directly comparable.
+    cost = CostModel().with_wire_rtt(delay_s * 1e9)
     for depth, adaptive in ((1, False), (2, False), (4, False), (8, False),
                             (8, True)):
         rs = build_replica_set(mode="local+remote", capacity=1 << 22,
                                n_backups=2, write_quorum=2,
                                pipeline_depth=depth,
-                               adaptive_depth=adaptive)
+                               adaptive_depth=adaptive, cost=cost)
         pol = FreqPolicy(4, wait=False)
         for _ in range(8):
             rs.log.append(payload)                 # warm, undelayed
         rs.log.drain()
+        v0 = rs.log.durable_vtime
         for t in rs.transports:
             t.inject(delay_s=delay_s)
         t0 = time.perf_counter()
@@ -136,8 +141,9 @@ def pipelined_force(quick: bool = False):
             ptr[:] = payload
             rs.log.complete(rid)
             pol.on_complete(rs.log, rid)
-        pol.drain(rs.log)
+        modelled_end = pol.drain(rs.log)
         wall = time.perf_counter() - t0
+        modelled_ms = (modelled_end - v0) * 1e-6
         trajectory = rs.log.depth_trajectory
         rs.group.drain()
         rs.shutdown()
@@ -145,7 +151,8 @@ def pipelined_force(quick: bool = False):
         extra = f";depths={'-'.join(str(d) for _, d in trajectory)}" \
             if adaptive else ""
         emit(f"fig6f/pipeline/{tag}", wall / n * 1e6,
-             f"wall_ms={wall * 1e3:.2f};rtt_ms={delay_s * 1e3:.0f}{extra}")
+             f"wall_ms={wall * 1e3:.2f};modelled_ms={modelled_ms:.2f};"
+             f"rtt_ms={delay_s * 1e3:.0f}{extra}")
 
 
 def salvage(quick: bool = False):

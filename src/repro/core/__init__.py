@@ -3,6 +3,7 @@
 Public surface:
 
   PMEMDevice / CostModel        — simulated PMEM with real volatility
+  VirtualTimeline               — per-resource modelled-time engine (§14)
   persist / write_and_force     — persistence + replication primitives
   IntegrityRegion / AtomicRegion— integrity + atomicity primitives
   Log / LogConfig               — the log (reserve/copy/complete/force)
@@ -19,6 +20,7 @@ Public surface:
 """
 
 from .pmem import CACHE_LINE, ATOM, CostModel, DeviceStats, PMEMDevice
+from .timeline import Interval, VirtualTimeline
 from .primitives import (AtomicRegion, ForceRound, IntegrityRegion, LF_REP,
                          ORDERINGS, PARALLEL, REP_LF, SalvageForceRound,
                          persist, reissue_segs, write_and_force,
@@ -47,6 +49,7 @@ from .router import (LogRouter, RouterError, RouterRecovery, Shard,
 
 __all__ = [
     "CACHE_LINE", "ATOM", "CostModel", "DeviceStats", "PMEMDevice",
+    "Interval", "VirtualTimeline",
     "AtomicRegion", "ForceRound", "IntegrityRegion", "LF_REP", "ORDERINGS",
     "PARALLEL", "REP_LF", "SalvageForceRound", "persist", "reissue_segs",
     "write_and_force", "write_and_force_segs", "write_and_force_segs_async",

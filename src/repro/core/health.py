@@ -104,7 +104,9 @@ class ScrubReport:
                                        # between snapshot and repair
     repair_bytes: int = 0              # chunk-diff traffic shipped
     repair_ranges: int = 0
-    vns: float = 0.0                   # modelled scan + repair time
+    vns: float = 0.0                   # scan_vns + repair_vns (compat)
+    scan_vns: float = 0.0              # modelled read+checksum time
+    repair_vns: float = 0.0            # modelled repair-traffic time
     corrupt_records: List[Tuple[str, int]] = field(default_factory=list)
     total_records: int = 0             # committed records in the snapshot
 
@@ -144,7 +146,9 @@ class Scrubber:
         self.unrepairable_total = 0
         self.skipped_trimmed_total = 0
         self.repair_bytes_total = 0
-        self.vns_total = 0.0
+        self.vns_total = 0.0           # scan + repair (compat)
+        self.scan_vns_total = 0.0
+        self.repair_vns_total = 0.0
 
     # -- construction ------------------------------------------------------ #
     @classmethod
@@ -237,11 +241,16 @@ class Scrubber:
             if scanned and (
                     (budget_b is not None
                      and rep.scanned_bytes + extent * n_copies > budget_b)
-                    or (budget_v is not None and rep.vns >= budget_v)):
+                    or (budget_v is not None
+                        and rep.scan_vns >= budget_v)):
                 break
             scanned.append(rec)
             rep.scanned_bytes += extent * n_copies
-            rep.vns += extent * n_copies \
+            # the vns budget bounds the SCAN slice: repair traffic is
+            # corrective work a corrupt pass must finish regardless, and
+            # counting it against the budget used to shrink coverage of
+            # exactly the passes that found damage (PR 10 satellite)
+            rep.scan_vns += extent * n_copies \
                 * (cost.pmem_read_byte_ns + cost.crc_byte_ns)
         rep.complete = len(scanned) == len(recs)
         self._cursor = 1 if rep.complete else \
@@ -309,7 +318,7 @@ class Scrubber:
                         dev.persist(a, b - a)
                         rep.repair_bytes += b - a
                         rep.repair_ranges += 1
-                        rep.vns += cost.rdma_rtt_ns \
+                        rep.repair_vns += cost.rdma_rtt_ns \
                             + (b - a) * cost.rdma_byte_ns
                     # read back and re-validate before declaring it fixed
                     raw = dev.read(off, extent)
@@ -323,12 +332,21 @@ class Scrubber:
                         rep.repaired += 1
                     else:
                         rep.unrepairable += 1
+        rep.vns = rep.scan_vns + rep.repair_vns
         self.scanned_bytes_total += rep.scanned_bytes
         self.corrupt_total += rep.corrupt
         self.repaired_total += rep.repaired
         self.unrepairable_total += rep.unrepairable
         self.repair_bytes_total += rep.repair_bytes
+        self.scan_vns_total += rep.scan_vns
+        self.repair_vns_total += rep.repair_vns
         self.vns_total += rep.vns
+        # background work rides the log's virtual timeline on its own
+        # resource: scan reads occupy scrub bandwidth, repair traffic is
+        # wire latency on top (DESIGN.md §14)
+        tl = getattr(log, "timeline", None)
+        if tl is not None and rep.vns:
+            tl.schedule("scrub", busy=rep.scan_vns, latency=rep.repair_vns)
         return rep
 
     def scrub_to_completion(self, max_passes: int = 64) -> List[ScrubReport]:
@@ -389,7 +407,9 @@ class Scrubber:
                     unrepairable=self.unrepairable_total,
                     skipped_trimmed=self.skipped_trimmed_total,
                     repair_bytes=self.repair_bytes_total,
-                    scrub_vns=self.vns_total)
+                    scrub_vns=self.vns_total,
+                    scan_vns=self.scan_vns_total,
+                    repair_vns=self.repair_vns_total)
 
 
 # --------------------------------------------------------------------------- #

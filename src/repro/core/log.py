@@ -57,6 +57,7 @@ import numpy as np
 from .pmem import PMEMDevice
 from .primitives import (AtomicRegion, ForceRound, REP_LF, reissue_segs,
                          write_and_force, write_and_force_segs_async)
+from .timeline import VirtualTimeline
 from .transport import (QuorumError, ReplicationGroup, RoundSalvage,
                         TransportError)
 
@@ -277,6 +278,9 @@ class _PipeRound:
     salvage_src: Optional[List[_SalvageSeg]] = None
     gen: int = 0          # salvage generation at issue (tombstone guard)
     issued_at: float = 0.0  # monotonic issue stamp (ack-rate estimator)
+    vt_after: float = 0.0   # virtual-time dependency horizon: this round
+                            # cannot start before the round that vacated
+                            # its pipeline slot ended (DESIGN.md §14)
 
 
 @dataclass(slots=True)
@@ -598,7 +602,25 @@ class Log:
         self.full_reclaims = 0        # LogFullError last-ditch reclaims
         self.trimmed_records_total = 0
         self.trimmed_bytes_total = 0
-        self.force_vns_total = 0.0    # accumulated modelled hardware ns
+        self.force_vns_total = 0.0    # accumulated modelled hardware WORK
+        # virtual-timeline modelled TIME (DESIGN.md §14): retired rounds
+        # are placed on per-resource clocks (cpu / flush / wire:<id>),
+        # so overlapped pipeline rounds overlap in modelled time instead
+        # of being charged as a serial sum.  force_vns_total stays the
+        # work integral (fig8's per-record cost basis); _durable_vtime
+        # is the monotone end of the latest retired round.
+        self.timeline = VirtualTimeline()
+        self._durable_vtime = 0.0
+        # ends of recently retired rounds, retirement order: round i's
+        # dependency horizon is the end of round i-depth (the round
+        # whose retirement vacated the slot i was issued into)
+        self._vt_tail: Deque[float] = deque(maxlen=cfg.pipeline_depth + 2)
+        # per-round modelled charge history, parallel to _ack_ends, so
+        # timed appends attribute to a waiter exactly the rounds that
+        # covered it (not whatever else retired concurrently)
+        self._ack_vns: List[float] = []
+        self._ack_vtime: List[float] = []
+        self._ack_base_vns = 0.0      # boundary round's charge (aged-out)
 
     # ------------------------------------------------------------------ #
     # lifecycle
@@ -901,15 +923,21 @@ class Log:
     # bulk trim made deep head movement routine (PR 9 satellite).
     _ACK_LOG_CAP = 1 << 15
 
-    def _record_ack_locked(self, end_lsn: int, now: float) -> None:
+    def _record_ack_locked(self, end_lsn: int, now: float,
+                           vns: float = 0.0, vtime: float = 0.0) -> None:
         self._ack_ends.append(end_lsn)
         self._ack_wall.append(now)
+        self._ack_vns.append(vns)
+        self._ack_vtime.append(vtime)
         if len(self._ack_ends) > self._ACK_LOG_CAP:
             drop = self._ACK_LOG_CAP // 2
             self._ack_base = self._ack_ends[drop - 1]
             self._ack_base_wall = self._ack_wall[drop - 1]
+            self._ack_base_vns = self._ack_vns[drop - 1]
             del self._ack_ends[:drop]
             del self._ack_wall[:drop]
+            del self._ack_vns[:drop]
+            del self._ack_vtime[:drop]
 
     def durable_ack_time(self, lsn: int) -> Optional[float]:
         """The wall moment (time.monotonic domain) the round covering
@@ -940,6 +968,48 @@ class Log:
         one pass)."""
         with self._commit_cv:
             return [self._ack_time_locked(l) for l in lsns]
+
+    def _round_index_locked(self, lsn: int) -> Optional[int]:
+        """Index into the ack history of the round that covered ``lsn``
+        (-1 for an LSN that aged out of the bounded history; None if not
+        durable yet or predating this process)."""
+        if lsn > self._durable_lsn:
+            return None
+        if lsn <= self._ack_base:
+            return -1
+        i = bisect_left(self._ack_ends, lsn)
+        if i == len(self._ack_ends):
+            return None
+        return i
+
+    def durable_round_vns(self, lsn: int) -> Optional[float]:
+        """Modelled work (vns) of the ONE durability round that covered
+        ``lsn`` — the per-waiter attribution timed appends use instead
+        of a ``force_vns_total`` delta, which raced with every
+        concurrent leader's and salvage retry's charge.  For an LSN that
+        aged out of the bounded history, the boundary round's charge (an
+        arbitrary but harmless stand-in: timed appends read this within
+        a round-trip of their own force).  None if not durable yet."""
+        with self._commit_cv:
+            i = self._round_index_locked(lsn)
+            if i is None:
+                return None
+            return self._ack_base_vns if i < 0 else self._ack_vns[i]
+
+    def durable_rounds_vns(self, lsns: List[int]) -> float:
+        """Summed modelled work of the DISTINCT rounds covering ``lsns``
+        (a batch whose members rode one round is charged that round
+        once).  Not-yet-durable members contribute nothing."""
+        with self._commit_cv:
+            seen = set()
+            total = 0.0
+            for lsn in lsns:
+                i = self._round_index_locked(lsn)
+                if i is None or i in seen:
+                    continue
+                seen.add(i)
+                total += self._ack_base_vns if i < 0 else self._ack_vns[i]
+            return total
 
     # a flapping backup can oscillate the controller indefinitely; the
     # trajectory is an observability aid, not a ledger — cap it
@@ -1108,6 +1178,13 @@ class Log:
                     entry = _PipeRound(lsn, start_off, end_off,
                                        gen=self._salvage_gen,
                                        issued_at=time.monotonic())
+                # timeline slot dependency (DESIGN.md §14): with k rounds
+                # still in flight this round occupies the slot vacated by
+                # the (depth - k)-th most recently retired round, whose
+                # end is in _vt_tail (the slot wait above guarantees
+                # k < depth, so that round has retired)
+                rel = len(self._vt_tail) + len(self._inflight) - self._depth
+                entry.vt_after = self._vt_tail[rel] if rel >= 0 else 0.0
                 self._inflight.append(entry)
                 self._issue_lsn = entry.end_lsn
                 self._issue_off = entry.end_off % self.cfg.capacity
@@ -1155,7 +1232,10 @@ class Log:
                     break
                 try:
                     vns = entry.handle.wait(timeout=0)
-                except BaseException as exc:
+                except Exception as exc:
+                    # KeyboardInterrupt/SystemExit must propagate to the
+                    # settling thread, not poison the pipeline as a
+                    # permanently failed round (PR 10 satellite)
                     self._pipe_fail_locked(entry, exc)
                     break
                 self._inflight.popleft()
@@ -1163,9 +1243,18 @@ class Log:
                 self._durable_lsn = entry.end_lsn
                 self._durable_off = entry.end_off % self.cfg.capacity
                 self.force_vns_total += vns
+                # place the round on the virtual timeline: its modelled
+                # completion is the max over its resource intervals, not
+                # the scalar sum — overlapped rounds now overlap in
+                # modelled time (DESIGN.md §14)
+                vt_end = entry.handle.schedule_on(self.timeline,
+                                                  entry.vt_after)
+                if vt_end > self._durable_vtime:
+                    self._durable_vtime = vt_end
+                self._vt_tail.append(vt_end)
                 self._clean_retires += 1
                 self._ack_est.observe_retire(now, entry.issued_at)
-                self._record_ack_locked(entry.end_lsn, now)
+                self._record_ack_locked(entry.end_lsn, now, vns, vt_end)
                 if entry.salvage_src:
                     # the salvaged ranges reached their write quorum after
                     # all: durability was achieved, so the failures that
@@ -1441,7 +1530,6 @@ class Log:
         With ``per_record=True`` also returns the record's durable-ack
         wall timestamp (``durable_ack_time``; None while a freq policy
         left it unforced) as a third element."""
-        v0 = self.force_vns_total
         rec_id, view = self.reserve(len(data))
         vns = 0.0
         if view is not None:
@@ -1451,8 +1539,11 @@ class Log:
             vns += self.copy(rec_id, data)
         vns += self.complete(rec_id)
         self.force(rec_id, freq=freq)
-        with self._commit_cv:
-            vns += self.force_vns_total - v0
+        # charge exactly the round that covered this record — a
+        # force_vns_total delta across the unlocked force would also
+        # bill every concurrent leader's round and salvage retry to
+        # this caller (PR 10 satellite)
+        vns += self.durable_round_vns(rec_id) or 0.0
         if per_record:
             return rec_id, vns, self.durable_ack_time(rec_id)
         return rec_id, vns
@@ -1640,13 +1731,13 @@ class Log:
         pipeline rounds carry different stamps, and members a freq
         policy left unforced carry None.  This is what makes batch p99
         claims record-level truth."""
-        v0 = self.force_vns_total
         batch = self.reserve_batch([len(p) for p in payloads])
         vns = self.copy_batch(batch, payloads)
         vns += self.complete_batch(batch)
         self.force_batch(batch, freq=freq)
-        with self._commit_cv:
-            vns += self.force_vns_total - v0
+        # sum the DISTINCT rounds that covered the batch's members (not
+        # a force_vns_total delta, which raced with concurrent leaders)
+        vns += self.durable_rounds_vns(batch.lsns)
         if per_record:
             return batch.lsns, vns, \
                 [self.durable_ack_time(l) for l in batch.lsns]
@@ -1657,6 +1748,24 @@ class Log:
     def durable_lsn(self) -> int:
         with self._commit_cv:
             return self._durable_lsn
+
+    @property
+    def durable_vtime(self) -> float:
+        """Modelled vtime (vns) at which the latest retired round ended
+        on the virtual timeline — the log's modelled durability *time*.
+        Monotone; equals ``force_vns_total`` exactly when rounds never
+        overlap (blocking forces at pipeline depth 1), and falls below
+        it by the overlap the pipeline achieves (DESIGN.md §14)."""
+        with self._commit_cv:
+            return self._durable_vtime
+
+    def modelled_time_ns(self) -> float:
+        """Modelled wall clock of everything charged to this log's
+        timeline: durability rounds plus background work (scrub reads)
+        scheduled on other resources."""
+        with self._commit_cv:
+            dv = self._durable_vtime
+        return max(dv, self.timeline.makespan())
 
     @property
     def completed_lsn(self) -> int:
@@ -2184,4 +2293,6 @@ class Log:
                         salvage_stash_cap=self.cfg.salvage_stash_cap,
                         salvage_spilled_bytes=self.salvage_spilled_bytes,
                         salvage_spilled_images=self.salvage_spilled_images,
-                        depth_bdp=self._ack_est.bdp_rounds())
+                        depth_bdp=self._ack_est.bdp_rounds(),
+                        force_vns_total=self.force_vns_total,
+                        durable_vtime=self._durable_vtime)

@@ -62,6 +62,14 @@ class CostModel:
 
     Defaults give: 1KB local persist ~ 1.1us, 1KB replicated write ~ 4.5us
     (one round trip), matching the magnitudes in Fig. 5b / Fig. 6.
+
+    These constants price individual operations; *composition* of the
+    prices into modelled latency is the virtual-timeline engine's job
+    (``timeline.VirtualTimeline``, DESIGN.md §14): overlapped durability
+    rounds are laid out on per-resource clocks, so the modelled time of
+    a pipelined run is a timeline max, not a serial sum of these costs.
+    DeviceStats counters are independent of the constants — swapping a
+    cost model never moves a pinned hardware-event count or digest.
     """
 
     fence_ns: float = 100.0           # sfence drain
@@ -73,6 +81,17 @@ class CostModel:
     llc_miss_ns: float = 80.0         # NIC DMA read that misses LLC (per line)
     crc_byte_ns: float = 0.25         # crc32 software cost (accounted, not spun)
     doorbell_ns: float = 150.0        # WQE post + doorbell ring (issue gap)
+
+    def with_wire_rtt(self, rtt_ns: float) -> "CostModel":
+        """This model with a different wire round trip — the what-if
+        knob the timeline engine makes meaningful: a far-memory / CXL
+        fabric (PAPERS.md, "Rethinking PM Crash Consistency in the CXL
+        Era") or an injected-latency testbed is the same hardware with a
+        slower wire, and only the modelled *time* should move, never the
+        DeviceStats.  fig6 uses this to model its injected wall-clock
+        RTT honestly instead of pricing a 4 ms stall at 3 us."""
+        from dataclasses import replace
+        return replace(self, rdma_rtt_ns=float(rtt_ns))
 
 
 @dataclass

@@ -24,6 +24,7 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from .pmem import CostModel, PMEMDevice
+from .timeline import VirtualTimeline
 from .transport import (QuorumError, QuorumRound, ReplicationGroup,
                         RoundSalvage)
 
@@ -196,6 +197,53 @@ class ForceRound:
         return max(rep_vns, self.loc_vns) \
             + 0.1 * min(self.loc_vns, rep_vns) + self.issue_vns
 
+    def schedule_on(self, tl: VirtualTimeline, after: float) -> float:
+        """Place this settled round on the virtual timeline and return its
+        modelled completion vtime (DESIGN.md §14).
+
+        ``after`` is the round's dependency horizon (its pipeline slot
+        became free).  Resources: the leader CPU pays the doorbell, the
+        device flush port pays the local flush, the per-lane wires pay
+        the quorum (``QuorumRound.schedule_on``).  The ordering decides
+        the dependency edges exactly as ``wait()`` decides the scalar
+        combine; with one round in flight at a time every resource clock
+        is ≤ ``after`` when the round starts, so the interval end reduces
+        to ``after + wait()`` — the depth=1 equivalence the tests pin.
+        """
+        if self.round is None:
+            if self.loc_vns:
+                return tl.schedule("flush", busy=self.loc_vns,
+                                   after=after).end
+            return after
+        if self.ordering == REP_LF:
+            t_post = tl.schedule("cpu", busy=self.issue_vns,
+                                 after=after).busy_until
+            flush_end = t_post
+            if self.loc_vns:
+                flush_end = tl.schedule("flush", busy=self.loc_vns,
+                                        after=t_post).end
+            q_end = self.round.schedule_on(tl, t_post)
+            return max(q_end, flush_end)
+        if self.ordering == LF_REP:
+            flush_end = after
+            if self.loc_vns:
+                flush_end = tl.schedule("flush", busy=self.loc_vns,
+                                        after=after).end
+            t_post = tl.schedule("cpu", busy=self.issue_vns,
+                                 after=flush_end).busy_until
+            return self.round.schedule_on(tl, t_post)
+        # PARALLEL: flush and wire race from the doorbell; the measured
+        # DIMM read/write contention penalty rides on top (Fig. 6).
+        t_post = tl.schedule("cpu", busy=self.issue_vns,
+                             after=after).busy_until
+        flush_rel = 0.0
+        if self.loc_vns:
+            flush_rel = tl.schedule("flush", busy=self.loc_vns,
+                                    after=t_post).end - t_post
+        rep_rel = self.round.schedule_on(tl, t_post) - t_post
+        return t_post + max(rep_rel, flush_rel) \
+            + 0.1 * min(self.loc_vns, rep_rel)
+
 
 def write_and_force_segs_async(
     dev: PMEMDevice,
@@ -318,6 +366,22 @@ class SalvageForceRound:
         if self.fresh is not None:
             vns = max(vns, self.fresh.wait(timeout))
         return vns + self.issue_vns
+
+    def schedule_on(self, tl: VirtualTimeline, after: float) -> float:
+        """Timeline placement of the bundled salvage round: one doorbell
+        on the leader CPU covers the delta posts, then every constituent
+        round (and the bundled fresh range, which pays its own doorbell
+        and flush) runs from that post in parallel; the bundle completes
+        at the latest constituent end.  Credited acks schedule as pure
+        latency — no wire occupancy — because nothing was re-sent."""
+        t_post = tl.schedule("cpu", busy=self.issue_vns,
+                             after=after).busy_until
+        end = t_post
+        for r in self.rounds:
+            end = max(end, r.schedule_on(tl, t_post))
+        if self.fresh is not None:
+            end = max(end, self.fresh.schedule_on(tl, t_post))
+        return end
 
 
 def reissue_segs(

@@ -549,6 +549,17 @@ class LogRouter:
             sh.rs.shutdown()
 
     # -- observability ------------------------------------------------------ #
+    def modelled_makespan_ns(self) -> float:
+        """Modelled completion time of the whole shard fleet: shards are
+        independent devices and wires, so N-way hardware waits on the
+        slowest shard's virtual timeline — a real per-resource timeline
+        max (DESIGN.md §14), not the old ``max(force_vns_total)`` serial
+        sum that ignored each shard's own pipeline overlap."""
+        with self._lock:
+            shards = list(self._shards.values())
+        return max((sh.rs.log.modelled_time_ns() for sh in shards),
+                   default=0.0)
+
     def stats(self) -> dict:
         with self._lock:
             shards = list(self._shards.values())
@@ -569,4 +580,7 @@ class LogRouter:
             totals["bytes_in"] += sh.bytes_in
             totals["records"] += st["log"]["next_lsn"] - 1
         return dict(shards=per, totals=totals,
-                    n_shards=len(per))
+                    n_shards=len(per),
+                    modelled_makespan_ns=max(
+                        (sh.rs.log.modelled_time_ns() for sh in shards),
+                        default=0.0))

@@ -32,6 +32,7 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from .pmem import CostModel, PMEMDevice
+from .timeline import VirtualTimeline
 
 
 class TransportError(Exception):
@@ -345,11 +346,19 @@ class QuorumRound:
         self._fut_lane: dict = {}                 # Future -> Transport
         self._lane_acked: List[Tuple[Transport, float]] = []
         self._lane_pending: dict = {}             # Transport -> _StagedWrite|None
+        # timeline bookkeeping (DESIGN.md §14): the acks that counted
+        # toward _acks, in arrival order, with lane identity (None =
+        # local ack), and each posted lane's wire *occupancy* — the vns
+        # the lane is busy (NIC source read + bytes on the wire) before
+        # the RTT/remote-persist latency tail that does not occupy it.
+        self._sched: List[Tuple[Optional[Transport], float]] = []
+        self._lane_occ: dict = {}                 # Transport -> occupancy vns
 
     # -- issue-side wiring (group only) ---------------------------------- #
     def _ack_local(self, vns: float) -> None:
         self._local_vns = vns
         self._acks.append(vns)
+        self._sched.append((None, vns))
 
     def _credit(self, t: "Transport", vns: float) -> None:
         """Bank a prior ack (a lane that acked the original round and is
@@ -358,6 +367,9 @@ class QuorumRound:
         with self._cv:
             self._acks.append(vns)
             self._lane_acked.append((t, vns))
+            # no _lane_occ entry: a banked credit sends nothing on the
+            # wire this round, so it is pure latency on the timeline
+            self._sched.append((t, vns))
 
     def _note_acked(self, t: "Transport", vns: float) -> None:
         """A lane that acked the original round but is not live now: its
@@ -385,6 +397,11 @@ class QuorumRound:
         with self._cv:
             self._lane_pending.setdefault(t, staged)
 
+    def _set_occ(self, t: "Transport", occ: float) -> None:
+        """Record a posted lane's wire occupancy (set at post time)."""
+        with self._cv:
+            self._lane_occ[t] = occ
+
     def _settled_locked(self) -> bool:
         return (len(self._acks) >= self._w
                 or (self._sealed and len(self._acks) + self._outstanding
@@ -408,6 +425,7 @@ class QuorumRound:
             if exc is None:
                 vns = fut.result()
                 self._acks.append(vns)
+                self._sched.append((t, vns))
                 if t is not None:
                     self._lane_pending.pop(t, None)
                     self._lane_acked.append((t, vns))
@@ -440,6 +458,43 @@ class QuorumRound:
                 local_vns=self._local_vns,
                 acked=list(self._lane_acked),
                 pending=list(self._lane_pending.items()))
+
+    def schedule_on(self, tl: VirtualTimeline, t_post: float) -> float:
+        """Place this round's acks on the virtual timeline and return the
+        modelled vtime at which the write quorum filled (DESIGN.md §14).
+
+        ``t_post`` is the vtime the doorbells were posted.  Each counted
+        ack becomes an interval: a lane ack occupies its wire resource
+        for the post-time occupancy (NIC source read + bytes on the
+        wire) and carries the rest of its vns (RTT + remote persist) as
+        non-occupying latency, so back-to-back rounds overlap on the
+        lane exactly as in-flight WQEs do on an RC QP.  Local acks and
+        banked salvage credits sent nothing this round and are pure
+        latency.  The quorum fills at the W-th smallest end.
+
+        Lanes still in flight when the round retires are not scheduled
+        (their clocks do not advance) — the same stragglers the legacy
+        scalar model ignored.
+        """
+        with self._cv:
+            sched = list(self._sched)
+            occ = dict(self._lane_occ)
+            w = self._w
+        ends: List[float] = []
+        for t, vns in sched:
+            lane_occ = occ.get(t) if t is not None else None
+            if lane_occ is None:
+                ends.append(t_post + vns)
+            else:
+                iv = tl.schedule(f"wire:{t.server.server_id}",
+                                 busy=lane_occ,
+                                 latency=max(vns - lane_occ, 0.0),
+                                 after=t_post)
+                ends.append(iv.end)
+        if not ends:
+            return t_post
+        ends.sort()
+        return ends[w - 1] if len(ends) >= w else ends[-1]
 
     def add_done_callback(self, fn: Callable[[], None]) -> None:
         with self._cv:
@@ -670,6 +725,8 @@ class ReplicationGroup:
                 t.close()        # evict, exactly as the lane harvest would
                 rnd._note_unposted(t)
                 continue
+            rnd._set_occ(t, staged.read_vns
+                         + staged.total * t.cost.rdma_byte_ns)
             fut = self._submit(t, lambda tt, s=staged: tt.write_imm_staged(s))
             rnd._track(fut, t, staged)
         rnd._seal()
@@ -722,6 +779,8 @@ class ReplicationGroup:
                 # at the original post — charge nothing again
                 staged = _StagedWrite(staged.datas, staged.total, 0.0,
                                       time.monotonic())
+            rnd._set_occ(t, staged.read_vns
+                         + staged.total * t.cost.rdma_byte_ns)
             fut = self._submit(t, lambda tt, s=staged: tt.write_imm_staged(s))
             rnd._track(fut, t, staged)
             posted_bytes += staged.total

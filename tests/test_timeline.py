@@ -1,0 +1,334 @@
+"""Virtual-timeline modelled-time engine (DESIGN.md §14).
+
+Unit semantics of ``VirtualTimeline`` (per-resource monotone clocks,
+busy/latency split, dependency edges) plus the equivalence contracts the
+PR-10 bugfix pins down:
+
+  * depth-1 blocking streams reduce to the legacy serial work sum — the
+    modelled durable time equals ``force_vns_total`` to well under a
+    nanosecond;
+  * deeper pipelines overlap rounds in modelled time, so durable vtime
+    lands well BELOW the serial work sum (the bug this PR fixes charged
+    them identically);
+  * lane wire clocks are per-backup: a straggler whose ack never counted
+    toward the quorum does not drag the modelled round end;
+  * timed appends attribute exactly their own covering round's work.
+"""
+
+import time
+
+import pytest
+
+from repro.core import (FreqPolicy, Interval, PMEMDevice, VirtualTimeline,
+                        build_replica_set)
+from repro.core.log import Log, LogConfig, _PipeRound
+from repro.core.replication import device_size
+
+CAP = 1 << 16
+
+
+# --------------------------------------------------------------------- #
+# unit semantics
+# --------------------------------------------------------------------- #
+def test_schedule_serializes_on_one_resource():
+    tl = VirtualTimeline()
+    a = tl.schedule("flush", busy=100.0)
+    b = tl.schedule("flush", busy=50.0)
+    assert (a.start, a.end) == (0.0, 100.0)
+    assert (b.start, b.end) == (100.0, 150.0)   # queued behind a
+    assert tl.now("flush") == 150.0
+
+
+def test_resources_are_independent_clocks():
+    tl = VirtualTimeline()
+    tl.schedule("cpu", busy=10.0)
+    w = tl.schedule("wire:node1", busy=5.0)
+    assert w.start == 0.0                        # cpu work didn't block it
+    assert tl.now("cpu") == 10.0
+    assert tl.now("wire:node1") == 5.0
+    assert tl.now("wire:node2") == 0.0           # untouched lane
+
+
+def test_latency_does_not_occupy_the_resource():
+    tl = VirtualTimeline()
+    a = tl.schedule("wire:n", busy=10.0, latency=90.0)
+    b = tl.schedule("wire:n", busy=10.0, latency=90.0)
+    assert a.end == 100.0
+    assert b.start == 10.0                       # pipelined behind a's BUSY
+    assert b.end == 110.0                        # not behind a's latency
+    assert a.busy == 10.0 and a.latency == 90.0
+
+
+def test_after_edge_defers_start_without_advancing_clock():
+    tl = VirtualTimeline()
+    iv = tl.schedule("flush", busy=20.0, after=500.0)
+    assert iv.start == 500.0 and iv.end == 520.0
+    # an earlier-dependency op still only waits for the resource
+    iv2 = tl.schedule("flush", busy=1.0, after=0.0)
+    assert iv2.start == 520.0
+
+
+def test_makespan_tracks_latency_tails_and_clocks_snapshot():
+    tl = VirtualTimeline()
+    tl.schedule("cpu", busy=10.0)
+    tl.schedule("wire:n", busy=5.0, latency=1000.0)
+    assert tl.makespan() == 1005.0               # > every busy clock
+    snap = tl.clocks()
+    assert snap == {"cpu": 10.0, "wire:n": 5.0}
+    snap["cpu"] = 0.0                            # a copy, not a view
+    assert tl.now("cpu") == 10.0
+
+
+def test_negative_costs_rejected():
+    tl = VirtualTimeline()
+    with pytest.raises(ValueError):
+        tl.schedule("cpu", busy=-1.0)
+    with pytest.raises(ValueError):
+        tl.schedule("cpu", latency=-1.0)
+
+
+def test_interval_is_immutable():
+    iv = Interval("cpu", 0.0, 5.0, 9.0)
+    with pytest.raises(AttributeError):
+        iv.end = 0.0
+
+
+# --------------------------------------------------------------------- #
+# depth-1 reduction: modelled time == legacy serial work sum
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_depth1_blocking_stream_equals_serial_work_sum():
+    """With one round in flight at a time every round's timeline start is
+    the previous round's end, so interval composition degenerates to the
+    scalar sum the legacy model computed.  W == N keeps the ack set
+    deterministic (no straggler can shift the quorum-th lane end between
+    the wait and the retirement)."""
+    rs = build_replica_set(mode="local+remote", capacity=CAP,
+                           n_backups=2, write_quorum=3, pipeline_depth=1)
+    for i in range(24):
+        rs.log.append(bytes([i & 0xFF]) * 96)
+    work = rs.log.force_vns_total
+    vtime = rs.log.durable_vtime
+    rs.group.drain()
+    rs.shutdown()
+    assert work > 0
+    # equal to the nanosecond (tolerance covers float association order
+    # only: interval arithmetic sums the same terms in a different order)
+    assert abs(vtime - work) < 1e-6, (vtime, work)
+
+
+@pytest.mark.slow
+def test_depth1_local_only_stream_equals_serial_work_sum():
+    dev = PMEMDevice(device_size(CAP))
+    log = Log(dev, LogConfig(capacity=CAP, pipeline_depth=1))
+    for i in range(16):
+        log.append(bytes([i & 0xFF]) * 64)
+    assert log.force_vns_total > 0
+    assert abs(log.durable_vtime - log.force_vns_total) < 1e-6
+
+
+# --------------------------------------------------------------------- #
+# overlap: deeper pipelines compress modelled time, not modelled work
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_pipeline_overlap_compresses_modelled_time():
+    """The PR-4..9 bug: ``force_vns_total`` charged overlapped rounds as
+    a serial sum, so modelled latency could not see the pipeline win.
+    The timeline must now put depth-4 durable vtime well below the work
+    sum, while work itself stays depth-invariant per round."""
+    results = {}
+    for depth in (1, 4):
+        rs = build_replica_set(mode="local+remote", capacity=CAP,
+                               n_backups=2, write_quorum=3,
+                               pipeline_depth=depth)
+        pol = FreqPolicy(4, wait=False)
+        for _ in range(64):
+            rid, ptr = rs.log.reserve(64)
+            ptr[:] = b"x" * 64
+            rs.log.complete(rid)
+            pol.on_complete(rs.log, rid)
+        end = pol.drain(rs.log)
+        results[depth] = (rs.log.force_vns_total, rs.log.durable_vtime)
+        assert end == rs.log.durable_vtime       # drain returns the vtime
+        rs.group.drain()
+        rs.shutdown()
+    w1, v1 = results[1]
+    w4, v4 = results[4]
+    # serial run: time == work; pipelined run: time well under work
+    assert abs(v1 - w1) < 1e-6
+    assert v4 < w4
+    # the wire RTT dominates these rounds, so 4 overlapped rounds should
+    # compress modelled time by >= 2x (measured ~3.8x; slack for the
+    # non-overlappable cpu/flush fraction)
+    assert w4 / v4 >= 2.0, (w4, v4)
+
+
+@pytest.mark.slow
+def test_modelled_time_and_stats_surface():
+    rs = build_replica_set(mode="local+remote", capacity=CAP,
+                           n_backups=2, write_quorum=3, pipeline_depth=2)
+    for i in range(8):
+        rs.log.append(b"m" * 64)
+    st = rs.log.stats()
+    assert st["durable_vtime"] == rs.log.durable_vtime > 0
+    assert st["force_vns_total"] == rs.log.force_vns_total
+    assert rs.log.modelled_time_ns() >= rs.log.durable_vtime
+    clocks = rs.log.timeline.clocks()
+    # every modelled resource participated
+    assert clocks.get("cpu", 0.0) > 0
+    assert clocks.get("flush", 0.0) > 0
+    assert clocks.get("wire:node1", 0.0) > 0
+    assert clocks.get("wire:node2", 0.0) > 0
+    rs.group.drain()
+    rs.shutdown()
+
+
+@pytest.mark.slow
+def test_straggler_lane_keeps_its_own_wire_clock():
+    """W < N: the quorum settles on the fast lane, the delayed lane acks
+    later via the straggler path and never joins the round's counted ack
+    set — so it must not advance the modelled round end, and its wire
+    clock stays behind the counted lane's."""
+    rs = build_replica_set(mode="local+remote", capacity=CAP,
+                           n_backups=2, write_quorum=2, pipeline_depth=1)
+    for _ in range(4):
+        rs.log.append(b"w" * 64)                 # warm, undelayed
+    rs.transports[1].inject(delay_s=0.05)        # node2 straggles
+    for _ in range(8):
+        rs.log.append(b"s" * 64)
+    clocks = rs.log.timeline.clocks()
+    vtime = rs.log.durable_vtime
+    rs.group.drain()
+    rs.shutdown()
+    fast = clocks.get("wire:node1", 0.0)
+    slow = clocks.get("wire:node2", 0.0)
+    assert fast > 0
+    assert slow < fast, clocks
+    # the straggler's uncounted acks never retroactively move the
+    # already-retired watermark
+    assert rs.log.durable_vtime == vtime
+
+
+@pytest.mark.slow
+def test_salvage_round_schedules_and_keeps_vtime_monotone():
+    """A mid-pipeline backup death fails in-flight rounds; the salvage
+    reissue must still land on the timeline (leader cpu + per-lane wire)
+    and keep durable vtime monotone and no worse than the serial work
+    sum."""
+    rs = build_replica_set(mode="local+remote", capacity=CAP,
+                           n_backups=2, write_quorum=3, pipeline_depth=4)
+    pol = FreqPolicy(4, wait=False)
+    for _ in range(8):
+        rs.log.append(b"v" * 64)
+    rs.log.drain()
+    v_pre = rs.log.durable_vtime
+    rs.transports[0].inject(delay_s=0.03)
+    rs.transports[1].inject(delay_s=0.002)
+    for i in range(32):
+        if i == 16:
+            rs.kill_backup_midwire("node1", settle_s=0.016)
+            rs.recover_backup("node1")
+        rid, ptr = rs.log.reserve(64)
+        ptr[:] = b"v" * 64
+        rs.log.complete(rid)
+        pol.on_complete(rs.log, rid)
+    pol.drain(rs.log)
+    st = rs.log.stats()
+    vtime = rs.log.durable_vtime
+    work = rs.log.force_vns_total
+    rs.group.drain()
+    rs.shutdown()
+    assert st["salvage_rounds"] >= 1             # the scenario really fired
+    assert vtime > v_pre                         # monotone advance
+    assert vtime <= work + 1e-6, (vtime, work)   # never worse than serial
+
+
+# --------------------------------------------------------------------- #
+# per-round attribution (satellite: timed appends)
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_timed_append_charges_exactly_its_covering_round():
+    """Single-threaded sync stream: each record rides its own round, so
+    the per-round charges must tile ``force_vns_total`` exactly — the
+    old ``force_vns_total`` delta also billed every concurrent leader's
+    round to whoever happened to be timing."""
+    rs = build_replica_set(mode="local+remote", capacity=CAP,
+                           n_backups=2, write_quorum=3, pipeline_depth=1)
+    per_round = []
+    rids = []
+    for i in range(12):
+        rid, _vns = rs.log.append_timed(bytes([i]) * 80)
+        charged = rs.log.durable_round_vns(rid)
+        assert charged is not None and charged > 0
+        per_round.append(charged)
+        rids.append(rid)
+    total = rs.log.force_vns_total
+    # distinct-round dedup: a batch of LSNs from one round charges once
+    assert abs(rs.log.durable_rounds_vns(rids + rids) -
+               sum(per_round)) < 1e-6
+    rs.group.drain()
+    rs.shutdown()
+    assert abs(sum(per_round) - total) < 1e-6, (sum(per_round), total)
+
+
+@pytest.mark.slow
+def test_round_attribution_history_boundaries():
+    rs = build_replica_set(mode="local+remote", capacity=CAP,
+                           n_backups=2, write_quorum=3, pipeline_depth=1)
+    rid = rs.log.append(b"a" * 64)
+    assert rs.log.durable_round_vns(rid + 1) is None    # not durable yet
+    assert rs.log.durable_rounds_vns([rid + 1]) == 0.0
+    assert rs.log.durable_round_vns(rid) > 0
+    rs.group.drain()
+    rs.shutdown()
+
+
+# --------------------------------------------------------------------- #
+# pump exception discipline (satellite: BaseException leak)
+# --------------------------------------------------------------------- #
+class _KIHandle:
+    """Settled handle whose first wait raises KeyboardInterrupt — the
+    settling thread being interrupted, not the round failing."""
+
+    def __init__(self, vns=123.0):
+        self._vns = vns
+        self._raised = False
+
+    def done(self):
+        return True
+
+    def wait(self, timeout=None):
+        if not self._raised:
+            self._raised = True
+            raise KeyboardInterrupt()
+        return self._vns
+
+    def schedule_on(self, tl, after):
+        return after + self._vns
+
+
+def test_pump_lets_keyboard_interrupt_propagate_without_failing_round():
+    """_pipe_pump used to catch BaseException, converting an operator
+    Ctrl-C on the settling thread into a permanently failed round.  It
+    must now propagate and leave the round retire-able."""
+    dev = PMEMDevice(device_size(CAP))
+    log = Log(dev, LogConfig(capacity=CAP, pipeline_depth=2))
+    rid, ptr = log.reserve(64)
+    ptr[:] = b"k" * 64
+    log.complete(rid)
+    entry = _PipeRound(rid, 0, 128, gen=log._salvage_gen,
+                       issued_at=time.monotonic())
+    entry.handle = _KIHandle()
+    with log._commit_cv:
+        log._inflight.append(entry)
+    with pytest.raises(KeyboardInterrupt):
+        log._pipe_pump()
+    # the interrupt did NOT poison the pipeline
+    assert entry.error is None
+    assert log._inflight and log._inflight[0] is entry
+    # the next pump retires the round cleanly
+    log._pipe_pump()
+    assert not log._inflight
+    assert log.durable_lsn == rid
+    assert log.force_vns_total == 123.0
+    assert log.durable_vtime == 123.0
